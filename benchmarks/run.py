@@ -1,0 +1,23 @@
+"""Benchmark harness — one table per paper figure. Prints
+``name,us_per_call,derived`` CSV (assignment format).
+
+  PYTHONPATH=src python -m benchmarks.run [table ...]
+Tables: params ema macs utilization latency_energy kernels accuracy roofline
+"""
+import sys
+
+from benchmarks import tables
+
+
+def main() -> None:
+    names = sys.argv[1:] or ["params", "ema", "macs", "utilization",
+                             "latency_energy", "kernels", "accuracy",
+                             "roofline"]
+    print("name,us_per_call,derived")
+    for n in names:
+        for name, us, derived in getattr(tables, f"bench_{n}")():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: build a factorized model, compute the paper's headline
+numbers, run a forward pass, and peek at the compressed format.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.core import ema
+from repro.core.factorized import FactorizationConfig
+from repro.models.transformer import Model
+
+
+def main():
+    print("assigned architectures:", ", ".join(list_archs()))
+
+    # 1. Any arch, with the T-REX factorization as a first-class flag.
+    cfg = get_config("qwen2.5-32b", "smoke", factorized=True)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, factorization=FactorizationConfig(
+        enabled=True, min_dim=32))
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    print(f"\nfactorized {cfg.name}: dictionaries shared across "
+          f"{cfg.n_layers} layers -> {sorted(params['dicts'])}")
+
+    batch = {"inputs": jax.random.randint(jax.random.key(1), (2, 32), 0,
+                                          cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.key(2), (2, 32), 0,
+                                          cfg.vocab_size)}
+    loss, metrics = model.loss(params, batch, sparse_train=True)
+    print(f"one loss evaluation: {float(loss):.3f} "
+          f"(sparsity reg {float(metrics['sparsity_reg']):.4f})")
+
+    # 2. The paper's quantitative claims from the analytical model.
+    fcfg = FactorizationConfig(enabled=True)
+    w = ema.PAPER_WORKLOADS["bert"]
+    r = ema.ema_report(w, fcfg)
+    print(f"\nBERT workload EMA: factorize {r['reduction_factorize']:.1f}x "
+          f"* compress {r['reduction_compress']:.2f}x "
+          f"* dyn-batch {r['reduction_batching']:.2f}x "
+          f"= {r['reduction_total']:.1f}x (paper: 31-65.9x)")
+    le = ema.latency_energy_report(w, fcfg, corner="slow")
+    print(f"chip model @0.45V: {le['us_per_token']:.0f} us/token, "
+          f"{le['uJ_per_token']:.2f} uJ/token (paper: 68-567 / 0.41-3.95)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Serve a small model with batched requests through the T-REX dynamic
+batcher: short prompts share weight sweeps; reports the utilization gain.
+
+  PYTHONPATH=src python examples/serve_dynamic_batching.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import request_lengths
+from repro.models.transformer import Model
+from repro.serve import Engine, Request
+
+
+def main():
+    cfg = get_config("qwen2.5-32b", "smoke")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = Engine(model, params, max_len=64, max_new_tokens=8)
+
+    rng = np.random.default_rng(0)
+    lens = request_lengths(24, max_len=64, dist="bert")
+    for rid, n in enumerate(lens):
+        eng.submit(Request(rid=rid, prompt=rng.integers(
+            0, cfg.vocab_size, size=n).astype(np.int32)))
+    done = eng.run()
+
+    print(f"served {len(done)} requests, e.g. request 0 -> {done[0].output}")
+    fills = [s["utilization"] for s in eng.stats]
+    reqs = sum(s["n_requests"] for s in eng.stats)
+    rows = sum(s["rows"] for s in eng.stats)
+    print(f"packed {reqs} requests into {rows} rows "
+          f"({reqs / rows:.2f} req/weight-sweep, paper: up to 4)")
+    print(f"mean slot utilization {np.mean(fills):.2f} vs "
+          f"unpacked {np.mean(lens) / 64:.2f} "
+          f"-> {np.mean(fills) / (np.mean(lens) / 64):.2f}x "
+          f"(paper: up to 3.31x)")
+
+
+if __name__ == "__main__":
+    main()

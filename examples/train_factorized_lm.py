@@ -1,0 +1,57 @@
+"""End-to-end driver: train a small LM with the full T-REX schedule —
+dense warmup -> factorized sparse training (STE + reg + periodic projection)
+-> compression -> compressed-model evaluation. Reproduces E6 ("minimal
+accuracy loss") at laptop scale; scale knobs go to 100M+ on real hardware.
+
+  PYTHONPATH=src python examples/train_factorized_lm.py [--steps 150]
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.factorized import FactorizationConfig
+from repro.data import lm_batches
+from repro.models.transformer import Model
+from repro.optim import OptConfig
+from repro.train import TrainLoopConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--arch", default="qwen2.5-32b")
+    ap.add_argument("--ckpt", default="/tmp/trex_ckpt")
+    args = ap.parse_args()
+
+    results = {}
+    for tag, fact in (("dense", False), ("factorized", True)):
+        cfg = get_config(args.arch, "smoke")
+        if fact:
+            cfg = dataclasses.replace(cfg, factorization=FactorizationConfig(
+                enabled=True, min_dim=32))
+        model = Model(cfg)
+        data = lm_batches(cfg.vocab_size, batch=8, seq=32, seed=1)
+        out = train(
+            model, data,
+            OptConfig(lr=5e-3, warmup_steps=10, schedule="constant",
+                      weight_decay=0.0),
+            TrainLoopConfig(total_steps=args.steps,
+                            ckpt_dir=f"{args.ckpt}_{tag}",
+                            ckpt_every=50, log_every=25,
+                            sparse_from_step=args.steps // 3,
+                            project_every=20),
+        )
+        results[tag] = out["history"][-1]["loss"]
+        print(f"[{tag}] final loss {results[tag]:.4f}")
+
+    gap = results["factorized"] - results["dense"]
+    print(f"\nfactorized - dense = {gap:+.4f} nats "
+          f"(paper claim: minimal accuracy loss)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json.
+
+  python experiments/summarize.py            # print the single-pod table
+  python experiments/summarize.py multi      # multi-pod table
+  python experiments/summarize.py --perf     # §Perf variants table
+  python experiments/summarize.py --inject   # replace TABLE:/PERF: markers
+"""
+import json
+import sys
+from pathlib import Path
+
+D = Path(__file__).parent / "dryrun"
+EXP = Path(__file__).parent.parent / "EXPERIMENTS.md"
+
+
+def fmt(x, p=3):
+    if x == 0:
+        return "0"
+    if x < 1e-4 or x >= 1e4:
+        return f"{x:.2e}"
+    return f"{x:.{p}g}"
+
+
+def load(mesh_kind, fact=False, opt=False):
+    out = {}
+    for p in sorted(D.glob(f"*__{mesh_kind}*.json")):
+        r = json.loads(p.read_text())
+        if bool(r.get("factorized")) != fact or bool(r.get("opt")) != opt:
+            continue
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def table(mesh_kind):
+    rows = []
+    for (arch, shape), r in sorted(load(mesh_kind).items()):
+        rl = r["roofline"]
+        h = r["hlo_analysis"]
+        rows.append((
+            arch, shape, r["step"],
+            fmt(rl["t_compute_s"]), fmt(rl["t_memory_s"]),
+            fmt(rl["t_collective_s"]), rl["dominant"],
+            fmt(r["memory"]["peak_per_chip_gb"]),
+            fmt(r["model_flops_6nd"], 3), fmt(r["useful_flops_ratio"], 2),
+            fmt(r["roofline_fraction"], 2),
+            fmt(h["dci_bytes_per_chip"] / 2**20, 3)
+            if mesh_kind == "multi" else "-",
+        ))
+    hdr = ("| arch | shape | step | t_comp(s) | t_mem(s) | t_coll(s) | "
+           "dominant | GB/chip | 6ND | useful | roofline_frac | DCI MiB |")
+    sep = "|" + "---|" * 12
+    return "\n".join([hdr, sep] + ["| " + " | ".join(map(str, r)) + " |"
+                                   for r in rows])
+
+
+def perf_rows():
+    base = load("single")
+    cells = [("qwen2.5-32b", "train_4k", "A"),
+             ("starcoder2-15b", "prefill_32k", "B"),
+             ("qwen2.5-32b", "decode_32k", "C")]
+    out = []
+    for arch, shape, tag in cells:
+        variants = [("baseline", base.get((arch, shape))),
+                    ("factorized (paper)",
+                     load("single", fact=True).get((arch, shape))),
+                    ("opt (beyond-paper)",
+                     load("single", opt=True).get((arch, shape))),
+                    ("opt+factorized",
+                     load("single", fact=True, opt=True).get((arch, shape)))]
+        for name, r in variants:
+            if r is None:
+                continue
+            rl = r["roofline"]
+            out.append(
+                f"| {tag}: {arch}/{shape} | {name} "
+                f"| {fmt(rl['t_compute_s'])} | {fmt(rl['t_memory_s'])} "
+                f"| {fmt(rl['t_collective_s'])} | {rl['dominant']} "
+                f"| {fmt(r['roofline_fraction'], 2)} "
+                f"| {fmt(r['useful_flops_ratio'], 2)} |")
+    hdr = ("| cell | variant | t_comp(s) | t_mem(s) | t_coll(s) | dominant "
+           "| roofline_frac | useful |")
+    return "\n".join([hdr, "|" + "---|" * 8] + out)
+
+
+def inject():
+    text = EXP.read_text()
+    text = text.replace("TABLE:SINGLE", table("single"))
+    text = text.replace("TABLE:MULTI", table("multi"))
+    text = text.replace("PERF:TABLE", perf_rows())
+    EXP.write_text(text)
+    print("injected tables into", EXP)
+
+
+if __name__ == "__main__":
+    if "--inject" in sys.argv:
+        inject()
+    elif "--perf" in sys.argv:
+        print(perf_rows())
+    else:
+        kind = sys.argv[1] if len(sys.argv) > 1 else "single"
+        print(table(kind))

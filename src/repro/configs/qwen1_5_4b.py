@@ -1,0 +1,21 @@
+"""qwen1.5-4b [dense]: 40L d_model=2560 20H (GQA kv=20 -> MHA) d_ff=6912
+vocab=151936 — QKV bias [hf:Qwen/Qwen1.5-0.5B; hf]."""
+from repro.models.common import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-4b", family="dense", n_layers=40, d_model=2560,
+        n_heads=20, n_kv_heads=20, d_head=128, d_ff=6912, vocab_size=151936,
+        qkv_bias=True, act="swiglu", norm="rmsnorm", rope=True,
+        rope_theta=1e6,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-4b-smoke", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, d_head=16, d_ff=128, vocab_size=256,
+        qkv_bias=True, act="swiglu", norm="rmsnorm", rope=True,
+        attn_chunk=16, remat="none",
+    )

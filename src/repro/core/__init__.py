@@ -1,0 +1,13 @@
+"""Core: the paper's contribution — factorized weights, T-REX compression,
+dynamic batching, and the EMA/chip accounting models."""
+from repro.core.factorized import (  # noqa: F401
+    DictionaryBank,
+    FactorizationConfig,
+    apply_compressed_linear,
+    apply_linear,
+    compress_linear,
+    init_linear,
+    linear_macs,
+    linear_param_bits,
+)
+from repro.core.packing import PackedBatch, PackingPolicy, pack_requests, segment_mask  # noqa: F401

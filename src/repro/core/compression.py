@@ -1,0 +1,332 @@
+"""T-REX compression pipeline (paper Fig. 23.1.3).
+
+Three techniques, applied offline after factorized training:
+
+1. ``W_S``: 16b -> 4b **non-uniform** quantization. A 16-entry codebook is fit
+   per dictionary with Lloyd's algorithm (k-means on the scalar weight
+   distribution); the chip decompresses through a LUT, we decompress through a
+   ``lut[codes]`` gather (fused into the matmul by ``kernels/dmm``).
+
+2. ``W_D`` indices: 8b -> 5b **delta encoding**. Within each column the sorted
+   row indices are stored as (first_index, deltas). To shrink deltas without
+   changing ``W_S @ W_D``, the rows of ``W_D`` and the columns of ``W_S`` are
+   jointly **reordered** by a co-occurrence-greedy permutation
+   (:func:`reorder_for_delta`).
+
+3. ``W_D`` values: 16b -> 6b **uniform** quantization after per-layer
+   normalization with scale ``(M - m)`` and offset ``m`` so the distribution is
+   symmetric around zero and uses the full quantizer range.
+
+Everything here is offline / host-side (numpy); the runtime decompression
+paths live in jnp (:func:`dequantize_nonuniform`, :func:`dequantize_uniform`,
+:func:`decompress_wd_dense`) and in the Pallas kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "NonUniformQuant",
+    "UniformQuant",
+    "CompressedWD",
+    "CompressedWS",
+    "quantize_nonuniform",
+    "dequantize_nonuniform",
+    "quantize_uniform",
+    "dequantize_uniform",
+    "delta_encode",
+    "delta_decode",
+    "bits_needed",
+    "reorder_for_delta",
+    "compress_ws",
+    "compress_wd",
+    "decompress_ws_dense",
+    "decompress_wd_dense",
+    "ws_compressed_bits",
+    "wd_compressed_bits",
+]
+
+
+# --------------------------------------------------------------------------
+# 1. Non-uniform (LUT / k-means) quantization for W_S
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class NonUniformQuant:
+    """4b non-uniform quantization result: codes index into a tiny codebook."""
+
+    codes: np.ndarray  # uint8, same shape as the source matrix, values < 2**bits
+    lut: np.ndarray  # float32 (2**bits,) codebook, sorted ascending
+    bits: int
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+
+def quantize_nonuniform(w: np.ndarray, bits: int = 4, iters: int = 25,
+                        seed: int = 0) -> NonUniformQuant:
+    """Lloyd's k-means over the scalar weight distribution.
+
+    Initialized at evenly spaced quantiles (a good init for bell-shaped weight
+    distributions and deterministic, which matters for test reproducibility).
+    """
+    w = np.asarray(w, np.float32)
+    flat = w.reshape(-1)
+    k = 1 << bits
+    # Quantile init: robust and deterministic.
+    qs = np.linspace(0.0, 1.0, k + 2)[1:-1]
+    centers = np.quantile(flat, qs).astype(np.float32)
+    # De-duplicate pathological inits (constant matrices).
+    centers = np.unique(centers)
+    while centers.size < k:
+        centers = np.concatenate([centers, centers[-1:] + 1e-6])
+    for _ in range(iters):
+        # Assign: nearest center via midpoint thresholds (sorted centers).
+        centers.sort()
+        edges = (centers[1:] + centers[:-1]) / 2
+        assign = np.searchsorted(edges, flat)
+        # Update.
+        sums = np.bincount(assign, weights=flat, minlength=k)
+        counts = np.bincount(assign, minlength=k)
+        nonempty = counts > 0
+        new_centers = centers.copy()
+        new_centers[nonempty] = (sums[nonempty] / counts[nonempty]).astype(np.float32)
+        if np.allclose(new_centers, centers, atol=1e-7):
+            centers = new_centers
+            break
+        centers = new_centers
+    centers.sort()
+    edges = (centers[1:] + centers[:-1]) / 2
+    codes = np.searchsorted(edges, flat).astype(np.uint8).reshape(w.shape)
+    return NonUniformQuant(codes=codes, lut=centers.astype(np.float32), bits=bits)
+
+
+def dequantize_nonuniform(codes: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """Runtime LUT decompression (the DMM core's dequantizer)."""
+    return jnp.take(lut, codes.astype(jnp.int32), axis=0)
+
+
+# --------------------------------------------------------------------------
+# 2. Uniform quantization with per-layer scale/offset for values of W_D
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class UniformQuant:
+    q: np.ndarray  # uint8 codes, values < 2**bits
+    scale: float  # (M - m): full range of the source values
+    offset: float  # m: minimum of the source values
+    bits: int
+
+
+def quantize_uniform(v: np.ndarray, bits: int = 6) -> UniformQuant:
+    """Paper: normalize each value with layer-specific scale (M-m), offset (m)."""
+    v = np.asarray(v, np.float32)
+    m = float(v.min()) if v.size else 0.0
+    M = float(v.max()) if v.size else 0.0
+    scale = M - m
+    levels = (1 << bits) - 1
+    if scale <= 0:
+        q = np.zeros(v.shape, np.uint8)
+        return UniformQuant(q=q, scale=0.0, offset=m, bits=bits)
+    q = np.clip(np.round((v - m) / scale * levels), 0, levels).astype(np.uint8)
+    return UniformQuant(q=q, scale=scale, offset=m, bits=bits)
+
+
+def dequantize_uniform(q: jnp.ndarray, scale, offset, bits: int = 6) -> jnp.ndarray:
+    levels = (1 << bits) - 1
+    return q.astype(jnp.float32) / levels * scale + offset
+
+
+# --------------------------------------------------------------------------
+# 3. Delta encoding + row reordering for indices of W_D
+# --------------------------------------------------------------------------
+
+
+def bits_needed(x: int) -> int:
+    return max(1, int(np.ceil(np.log2(x + 1))) if x > 0 else 1)
+
+
+def delta_encode(indices: np.ndarray) -> np.ndarray:
+    """Column-wise delta encoding of sorted indices.
+
+    ``indices`` is (nnz, n_cols), each column sorted ascending. Row 0 keeps the
+    absolute first index; rows 1.. hold consecutive differences. The chip uses
+    these for *relative addressing* without explicit decode; we keep the same
+    layout so the SMM kernel can cumsum on the fly.
+    """
+    indices = np.asarray(indices)
+    out = indices.copy()
+    out[1:] = indices[1:] - indices[:-1]
+    return out
+
+
+def delta_decode(deltas: np.ndarray) -> np.ndarray:
+    return np.cumsum(deltas, axis=0)
+
+
+def reorder_for_delta(idx: np.ndarray, r: int) -> np.ndarray:
+    """Greedy co-occurrence permutation of the ``r`` rows of W_D.
+
+    The paper rearranges W_S columns / W_D rows so consecutive NZ indices within
+    a column are close (small deltas fit 5 bits). Rows that appear in the same
+    columns should be adjacent; we order rows greedily by co-occurrence count.
+
+    Returns ``perm`` with new_row = position of old row, i.e. apply as
+    ``wd_new = wd[inv(perm)]`` via ``np.argsort``? We return ``order`` such that
+    ``wd_new = wd[order]`` and ``ws_new = ws[:, order]``.
+    """
+    nnz, n_cols = idx.shape
+    # Row -> set of columns bitmap, in packed uint64 words for speed.
+    words = (n_cols + 63) // 64
+    occ = np.zeros((r, words), np.uint64)
+    cols = np.arange(n_cols)
+    for k in range(nnz):
+        rows = idx[k]
+        occ[rows, cols // 64] |= np.uint64(1) << (cols % 64).astype(np.uint64)
+    popcnt = np.vectorize(lambda v: bin(int(v)).count("1"))
+    freq = popcnt(occ).sum(axis=1)
+
+    order = np.empty(r, np.int64)
+    used = np.zeros(r, bool)
+    cur = int(freq.argmax())
+    order[0] = cur
+    used[cur] = True
+    for i in range(1, r):
+        inter = popcnt(occ & occ[cur]).sum(axis=1).astype(np.int64)
+        inter[used] = -1
+        nxt = int(inter.argmax())
+        if inter[nxt] <= 0:  # no co-occurrence left: take most frequent unused
+            rem = np.where(~used)[0]
+            nxt = int(rem[freq[rem].argmax()])
+        order[i] = nxt
+        used[nxt] = True
+        cur = nxt
+    return order
+
+
+# --------------------------------------------------------------------------
+# Compressed containers
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CompressedWS:
+    """Dictionary matrix, 4b non-uniform codes + LUT. Shape (d_in, r)."""
+
+    codes: np.ndarray  # uint8 (d_in, r)
+    lut: np.ndarray  # float32 (16,)
+    bits: int
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+
+@dataclasses.dataclass
+class CompressedWD:
+    """Per-layer sparse matrix in T-REX format.
+
+    (indices, values) per column; no column pointers needed because nnz/column
+    is fixed (the paper's point vs CSC). Indices stored delta-encoded.
+    """
+
+    deltas: np.ndarray  # int32 (nnz, d_out) — row 0 absolute, rest deltas
+    values_q: np.ndarray  # uint8 (nnz, d_out)
+    scale: float
+    offset: float
+    value_bits: int
+    r: int  # number of rows of the dense W_D
+    target_delta_bits: int = 5
+
+    @property
+    def nnz(self) -> int:
+        return self.deltas.shape[0]
+
+    @property
+    def d_out(self) -> int:
+        return self.deltas.shape[1]
+
+    @property
+    def achieved_delta_bits(self) -> int:
+        if self.nnz <= 1:
+            return 1
+        return bits_needed(int(self.deltas[1:].max(initial=0)))
+
+    @property
+    def first_index_bits(self) -> int:
+        return bits_needed(self.r - 1)
+
+
+def compress_ws(ws: np.ndarray, bits: int = 4) -> CompressedWS:
+    q = quantize_nonuniform(ws, bits=bits)
+    return CompressedWS(codes=q.codes, lut=q.lut, bits=bits)
+
+
+def compress_wd(wd: np.ndarray, nnz: int, value_bits: int = 6,
+                order: Optional[np.ndarray] = None) -> CompressedWD:
+    """Compress a (r, d_out) sparse-by-construction matrix.
+
+    ``order`` is the row permutation from :func:`reorder_for_delta`; it must be
+    applied consistently to W_S columns by the caller.
+    """
+    wd = np.asarray(wd, np.float32)
+    if order is not None:
+        wd = wd[order]
+    r, d_out = wd.shape
+    # Top-nnz per column (matches training projection; idempotent on trained W_D).
+    keep = np.argsort(-np.abs(wd), axis=0)[:nnz]  # (nnz, d_out)
+    idx = np.sort(keep, axis=0)
+    vals = np.take_along_axis(wd, idx, axis=0)
+    uq = quantize_uniform(vals, bits=value_bits)
+    return CompressedWD(
+        deltas=delta_encode(idx).astype(np.int32),
+        values_q=uq.q,
+        scale=uq.scale,
+        offset=uq.offset,
+        value_bits=value_bits,
+        r=r,
+    )
+
+
+def decompress_ws_dense(cws: CompressedWS, dtype=jnp.float32) -> jnp.ndarray:
+    return dequantize_nonuniform(jnp.asarray(cws.codes), jnp.asarray(cws.lut)).astype(dtype)
+
+
+def decompress_wd_dense(cwd: CompressedWD, dtype=jnp.float32) -> jnp.ndarray:
+    """Dense (r, d_out) reconstruction — the pure-jnp oracle the SMM kernel must match."""
+    idx = jnp.cumsum(jnp.asarray(cwd.deltas), axis=0)  # (nnz, d_out)
+    vals = dequantize_uniform(jnp.asarray(cwd.values_q), cwd.scale, cwd.offset,
+                              cwd.value_bits)
+    dense = jnp.zeros((cwd.r, cwd.d_out), jnp.float32)
+    cols = jnp.broadcast_to(jnp.arange(cwd.d_out), idx.shape)
+    dense = dense.at[idx.reshape(-1), cols.reshape(-1)].add(vals.reshape(-1))
+    return dense.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Size accounting (feeds bench_params / bench_ema)
+# --------------------------------------------------------------------------
+
+
+def ws_compressed_bits(cws: CompressedWS) -> int:
+    d_in, r = cws.shape
+    return d_in * r * cws.bits + cws.lut.size * 16  # codes + 16b LUT entries
+
+
+def wd_compressed_bits(cwd: CompressedWD, use_achieved_delta_bits: bool = False) -> int:
+    """Bits to stream one layer's W_D.
+
+    Per column: one absolute first index (ceil(log2 r) bits) + (nnz-1) deltas at
+    5b (paper) or at the achieved width + nnz values at 6b. Scale/offset: 2x16b.
+    """
+    db = cwd.achieved_delta_bits if use_achieved_delta_bits else cwd.target_delta_bits
+    db = max(db, cwd.achieved_delta_bits) if use_achieved_delta_bits else db
+    per_col = cwd.first_index_bits + (cwd.nnz - 1) * db + cwd.nnz * cwd.value_bits
+    return per_col * cwd.d_out + 2 * 16

@@ -1,0 +1,137 @@
+"""Dynamic batching (paper Fig. 23.1.4), generalized to sequence packing.
+
+T-REX monitors input lengths: an input <= max_len/2 (max_len/4) shares the
+datapath with 1 (3) other short inputs, so one load of the parameters serves
+2 (4) inputs — less EMA, higher utilization. On TPU the same idea is
+**sequence packing**: several requests share one (row, max_len) slot with
+segment ids, and attention is masked block-diagonally. The policy below keeps
+the paper's power-of-two bucket structure (1x / 2x / 4x, extensible).
+
+Pure-host logic (numpy) + jnp mask builders used inside the models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "PackingPolicy",
+    "PackedBatch",
+    "pack_requests",
+    "segment_mask",
+    "packing_utilization",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PackingPolicy:
+    """T-REX policy: lengths in (max/2, max] ride alone; (max/4, max/2] pair up;
+    <= max/4 go four to a row. ``max_per_row`` caps how deep the packing goes
+    (the chip supports 4; packing on TPU can go further for serving)."""
+
+    max_len: int = 128
+    max_per_row: int = 4
+
+    def bucket(self, length: int) -> int:
+        """Number of inputs of this length that share one row."""
+        if length <= 0 or length > self.max_len:
+            raise ValueError(f"length {length} out of (0, {self.max_len}]")
+        share = 1
+        while (
+            share < self.max_per_row
+            and length <= self.max_len // (share * 2)
+        ):
+            share *= 2
+        return share
+
+
+@dataclasses.dataclass
+class PackedBatch:
+    """Fixed-shape packed batch. ``segment_ids`` is 0 for padding, 1.. for
+    requests; ``request_slots[i] = (row, start, length)`` recovers outputs."""
+
+    tokens: np.ndarray  # (rows, max_len) int32
+    segment_ids: np.ndarray  # (rows, max_len) int32
+    positions: np.ndarray  # (rows, max_len) int32, within-request positions
+    request_slots: List[Tuple[int, int, int]]
+
+    @property
+    def rows(self) -> int:
+        return self.tokens.shape[0]
+
+
+def pack_requests(
+    requests: Sequence[np.ndarray], policy: PackingPolicy
+) -> PackedBatch:
+    """First-fit-decreasing packing of requests into rows of ``max_len`` tokens.
+
+    Requests longer than max_len must be chunked by the caller (serving layer).
+    Each row holds at most ``policy.max_per_row`` requests (hardware fidelity);
+    rows are never split across requests.
+    """
+    order = sorted(range(len(requests)), key=lambda i: -len(requests[i]))
+    rows: List[List[int]] = []  # request indices per row
+    row_used: List[int] = []
+    row_count: List[int] = []
+    assignment = {}
+    for i in order:
+        L = len(requests[i])
+        share = policy.bucket(L)
+        placed = False
+        if share > 1:
+            for rix in range(len(rows)):
+                if (
+                    row_count[rix] < policy.max_per_row
+                    and row_used[rix] + L <= policy.max_len
+                ):
+                    assignment[i] = (rix, row_used[rix])
+                    row_used[rix] += L
+                    row_count[rix] += 1
+                    rows[rix].append(i)
+                    placed = True
+                    break
+        if not placed:
+            rix = len(rows)
+            rows.append([i])
+            row_used.append(L)
+            row_count.append(1)
+            assignment[i] = (rix, 0)
+
+    n_rows = len(rows)
+    tokens = np.zeros((n_rows, policy.max_len), np.int32)
+    seg = np.zeros((n_rows, policy.max_len), np.int32)
+    pos = np.zeros((n_rows, policy.max_len), np.int32)
+    slots: List[Tuple[int, int, int]] = [None] * len(requests)  # type: ignore
+    for i, req in enumerate(requests):
+        rix, start = assignment[i]
+        L = len(req)
+        tokens[rix, start : start + L] = np.asarray(req, np.int32)
+        seg[rix, start : start + L] = i + 1
+        pos[rix, start : start + L] = np.arange(L)
+        slots[i] = (rix, start, L)
+    return PackedBatch(tokens=tokens, segment_ids=seg, positions=pos,
+                       request_slots=slots)
+
+
+def segment_mask(
+    seg_q: jnp.ndarray, seg_kv: jnp.ndarray, causal: bool = True
+) -> jnp.ndarray:
+    """(B, Sq, Skv) bool mask: same nonzero segment (+ causal within segment).
+
+    This is the TPU analogue of the chip's dataflow reconfiguration: the packed
+    requests never attend across each other.
+    """
+    same = (seg_q[:, :, None] == seg_kv[:, None, :]) & (seg_q[:, :, None] > 0)
+    if causal:
+        sq, skv = seg_q.shape[1], seg_kv.shape[1]
+        tri = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        same = same & tri[None]
+    return same
+
+
+def packing_utilization(batch: PackedBatch) -> float:
+    """Fraction of the (rows x max_len) token slots doing useful work."""
+    return float((batch.segment_ids > 0).mean())

@@ -1,0 +1,67 @@
+"""Fixed-NZ-per-column sparsity for W_D (paper Fig. 23.1.3).
+
+The paper trains W_D "to be sparse by adding a regularization term to the loss
+function, ensuring that each column contains a fixed number of NZs". We
+implement that as:
+
+- a **magnitude top-k projection per column** applied in the forward pass with a
+  straight-through gradient (so dense gradients keep flowing into pruned slots
+  and the support set can migrate during training), and
+- a **group-L1 regularizer on the out-of-support mass**, which drives the
+  non-top-k entries toward exact zero so the projection is lossless at
+  convergence / compression time.
+
+All functions are jit-compatible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "project_topk_columns",
+    "topk_column_mask",
+    "ste_sparse",
+    "out_of_support_l1",
+    "column_sparsity",
+]
+
+
+def topk_column_mask(wd: jnp.ndarray, nnz: int) -> jnp.ndarray:
+    """Boolean mask keeping the ``nnz`` largest-|.| entries of each column.
+
+    ``wd`` is (r, d_out); columns live on axis 1, the reduction is over rows
+    (axis 0). Deterministic tie-break by row index via lax.top_k semantics.
+    """
+    r = wd.shape[0]
+    nnz = min(nnz, r)
+    mag = jnp.abs(wd).T  # (d_out, r): top_k works on the last axis
+    _, idx = jax.lax.top_k(mag, nnz)  # (d_out, nnz)
+    mask = jnp.zeros(mag.shape, bool).at[
+        jnp.arange(mag.shape[0])[:, None], idx
+    ].set(True)
+    return mask.T  # (r, d_out)
+
+
+def project_topk_columns(wd: jnp.ndarray, nnz: int) -> jnp.ndarray:
+    return jnp.where(topk_column_mask(wd, nnz), wd, 0.0)
+
+
+def ste_sparse(wd: jnp.ndarray, nnz: int) -> jnp.ndarray:
+    """Forward: projected sparse W_D. Backward: identity (straight-through)."""
+    return wd + jax.lax.stop_gradient(project_topk_columns(wd, nnz) - wd)
+
+
+def out_of_support_l1(wd: jnp.ndarray, nnz: int) -> jnp.ndarray:
+    """L1 mass outside the per-column top-k support (the paper's regularizer).
+
+    Normalized per entry so the coefficient is transferable across layer sizes.
+    """
+    off = jnp.where(topk_column_mask(wd, nnz), 0.0, wd)
+    denom = jnp.maximum(off.size, 1)
+    return jnp.sum(jnp.abs(off)) / denom
+
+
+def column_sparsity(wd: jnp.ndarray, tol: float = 0.0) -> jnp.ndarray:
+    """Fraction of exactly-(or tol-)zero entries, per matrix."""
+    return jnp.mean(jnp.abs(wd) <= tol)

@@ -1,0 +1,1 @@
+from repro.data.synthetic import MarkovLM, lm_batches, request_lengths  # noqa: F401

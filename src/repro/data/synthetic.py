@@ -1,0 +1,72 @@
+"""Deterministic synthetic data: token streams with learnable structure, and
+request-length distributions for the serving/dynamic-batching benchmarks.
+
+The LM stream is a tiny order-2 Markov chain over the vocab — random enough
+to be non-trivial, structured enough that a real model's loss drops well
+below the uniform baseline within a few hundred steps (used by
+examples/train_factorized_lm.py to reproduce the paper's "minimal accuracy
+loss" claim E6 at laptop scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+__all__ = ["MarkovLM", "lm_batches", "request_lengths"]
+
+
+@dataclasses.dataclass
+class MarkovLM:
+    vocab_size: int
+    branch: int = 8  # successors per (prev, cur) state
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        # successor table: (V, branch) — next token depends on current token
+        # plus a parity bit of the previous one (order-2-ish, cheap).
+        self.table = rng.integers(0, self.vocab_size,
+                                  size=(2, self.vocab_size, self.branch))
+
+    def sample(self, rng: np.random.Generator, length: int) -> np.ndarray:
+        out = np.empty(length + 1, np.int64)
+        out[0] = rng.integers(self.vocab_size)
+        out[1] = rng.integers(self.vocab_size)
+        for t in range(2, length + 1):
+            parity = out[t - 2] & 1
+            out[t] = self.table[parity, out[t - 1],
+                                rng.integers(self.branch)]
+        return out
+
+
+def lm_batches(vocab_size: int, batch: int, seq: int, *, seed: int = 0,
+               n_codebooks: int = 1) -> Iterator[Dict[str, np.ndarray]]:
+    """Infinite stream of {"inputs", "labels"} next-token batches."""
+    lm = MarkovLM(vocab_size, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    while True:
+        rows = np.stack([lm.sample(rng, seq) for _ in range(batch)])
+        inputs = rows[:, :-1].astype(np.int32)
+        labels = rows[:, 1:].astype(np.int32)
+        if n_codebooks > 1:
+            labels = np.stack([labels] * n_codebooks, axis=-1) % vocab_size
+        yield {"inputs": inputs, "labels": labels}
+
+
+def request_lengths(n: int, max_len: int = 128, dist: str = "bert",
+                    seed: int = 0) -> List[int]:
+    """Request-length samples matching the paper's workload profiles."""
+    rng = np.random.default_rng(seed)
+    if dist == "uniform":
+        return list(rng.integers(1, max_len + 1, size=n))
+    if dist == "vit":  # fixed-size image grids
+        return [max_len] * n
+    # "bert": many short inputs (GLUE-like) — the dynamic-batching showcase
+    buckets = [max_len // 8, max_len // 4, max_len // 2, max_len]
+    probs = [0.25, 0.4, 0.25, 0.1]
+    idx = rng.choice(len(buckets), size=n, p=probs)
+    jitter = rng.integers(-max_len // 16, 1, size=n)
+    return [int(np.clip(buckets[i] + j, 1, max_len))
+            for i, j in zip(idx, jitter)]

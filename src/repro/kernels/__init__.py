@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- dmm: fused 4b-LUT dequant + matmul (X @ W_S), the DMM core analogue.
+- smm: fused delta-decode + 6b dequant + densify + matmul ((X W_S) @ W_D),
+  the SMM core analogue (dense-MXU trade, DESIGN §2).
+- afu: fused softmax (LUT exp) / layernorm+residual epilogues.
+
+All validated in interpret mode on CPU against their ref.py oracles; on TPU
+hardware set interpret=False.
+"""
+from repro.kernels.dmm.ops import lut_matmul  # noqa: F401
+from repro.kernels.smm.ops import compressed_matmul  # noqa: F401
+from repro.kernels.afu.ops import fused_layernorm_residual, fused_softmax  # noqa: F401

@@ -1,0 +1,78 @@
+"""AFU Pallas kernels: fused softmax (LUT exp) and fused residual+layernorm.
+
+The T-REX AFU performs softmax / layernorm / GELU / residual in one pass over
+the data with LUT-assisted nonlinearities. On TPU the analogue is epilogue
+fusion in VMEM: one HBM read, all the pointwise/reduction work in registers,
+one HBM write. Rows are blocked; the full feature axis rides in the block
+(features <= a few thousand fit VMEM comfortably).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.afu.ref import LUT_RANGE, LUT_SIZE
+
+
+def _softmax_kernel(x_ref, table_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = x.max(-1, keepdims=True)
+    xc = jnp.clip(x - m, -LUT_RANGE, 0.0)
+    f = (xc + LUT_RANGE) / LUT_RANGE * (LUT_SIZE - 1)
+    i0 = jnp.clip(jnp.floor(f).astype(jnp.int32), 0, LUT_SIZE - 2)
+    frac = f - i0.astype(jnp.float32)
+    table = table_ref[...]
+    lo = jnp.take(table, i0)
+    hi = jnp.take(table, i0 + 1)
+    e = lo + (hi - lo) * frac
+    o_ref[...] = e / e.sum(-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def softmax_lut(x: jnp.ndarray, table: jnp.ndarray, *, block_rows: int = 256,
+                interpret: bool = True) -> jnp.ndarray:
+    """LUT-exp softmax over the last axis. x (R, C) -> (R, C) f32."""
+    R, C = x.shape
+    br = min(block_rows, R)
+    assert R % br == 0, (R, br)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(R // br,),
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0)),
+                  pl.BlockSpec((LUT_SIZE,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((br, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.float32),
+        interpret=interpret,
+    )(x, table)
+
+
+def _ln_res_kernel(x_ref, res_ref, scale_ref, bias_ref, o_ref, *, eps: float):
+    h = x_ref[...].astype(jnp.float32) + res_ref[...].astype(jnp.float32)
+    mu = h.mean(-1, keepdims=True)
+    var = ((h - mu) ** 2).mean(-1, keepdims=True)
+    o_ref[...] = (h - mu) * jax.lax.rsqrt(var + eps) * scale_ref[...] \
+        + bias_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps", "interpret"))
+def layernorm_residual(x: jnp.ndarray, res: jnp.ndarray, scale: jnp.ndarray,
+                       bias: jnp.ndarray, *, block_rows: int = 256,
+                       eps: float = 1e-6, interpret: bool = True) -> jnp.ndarray:
+    """Fused (x + res) -> layernorm. x, res (R, C); scale/bias (C,)."""
+    R, C = x.shape
+    br = min(block_rows, R)
+    assert R % br == 0, (R, br)
+    return pl.pallas_call(
+        functools.partial(_ln_res_kernel, eps=eps),
+        grid=(R // br,),
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0)),
+                  pl.BlockSpec((br, C), lambda i: (i, 0)),
+                  pl.BlockSpec((C,), lambda i: (0,)),
+                  pl.BlockSpec((C,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((br, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.float32),
+        interpret=interpret,
+    )(x, res, scale, bias)

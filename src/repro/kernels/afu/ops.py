@@ -1,0 +1,39 @@
+"""Public AFU ops with padding wrappers."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.afu.afu import layernorm_residual, softmax_lut
+from repro.kernels.afu.ref import exp_lut_table, softmax_lut_reference
+
+
+def fused_softmax(x: jnp.ndarray, *, use_kernel: bool = True,
+                  interpret: bool = True) -> jnp.ndarray:
+    """LUT-exp softmax over the last axis of an (..., C) array."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    if not use_kernel:
+        return softmax_lut_reference(x2).reshape(shape)
+    R = x2.shape[0]
+    br = R
+    for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if R % cand == 0:
+            br = cand
+            break
+    out = softmax_lut(x2, exp_lut_table(), block_rows=br, interpret=interpret)
+    return out.reshape(shape)
+
+
+def fused_layernorm_residual(x, res, scale, bias, *, interpret: bool = True):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    r2 = res.reshape(-1, shape[-1])
+    R = x2.shape[0]
+    br = R
+    for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if R % cand == 0:
+            br = cand
+            break
+    out = layernorm_residual(x2, r2, scale, bias, block_rows=br,
+                             interpret=interpret)
+    return out.reshape(shape)

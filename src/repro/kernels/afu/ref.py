@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the AFU kernel: fused softmax / layernorm / GELU /
+residual, with the chip's LUT-based exponential.
+
+The T-REX AFU evaluates exp() through a lookup table and finishes softmax with
+integer ALUs. We model the LUT as a 64-entry piecewise-linear approximation of
+exp on [-T, 0] (inputs are max-subtracted so they always land there; anything
+below -T flushes to 0, matching the chip's dynamic-range clamp).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LUT_SIZE = 64
+LUT_RANGE = 16.0  # exp(-16) ~ 1e-7: below the 6b/8b activation resolution
+
+
+def exp_lut_table() -> jnp.ndarray:
+    xs = jnp.linspace(-LUT_RANGE, 0.0, LUT_SIZE)
+    return jnp.exp(xs)
+
+
+def lut_exp(x: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Piecewise-linear exp for x <= 0 (values below -T clamp to ~0)."""
+    xc = jnp.clip(x, -LUT_RANGE, 0.0)
+    f = (xc + LUT_RANGE) / LUT_RANGE * (LUT_SIZE - 1)
+    i0 = jnp.clip(jnp.floor(f).astype(jnp.int32), 0, LUT_SIZE - 2)
+    frac = f - i0
+    lo = jnp.take(table, i0)
+    hi = jnp.take(table, i0 + 1)
+    return lo + (hi - lo) * frac
+
+
+def softmax_lut_reference(x: jnp.ndarray) -> jnp.ndarray:
+    """Row softmax over the last axis using the LUT exp."""
+    table = exp_lut_table()
+    m = x.max(-1, keepdims=True)
+    e = lut_exp(x - m, table)
+    return e / e.sum(-1, keepdims=True)
+
+
+def layernorm_residual_reference(x: jnp.ndarray, res: jnp.ndarray,
+                                 scale: jnp.ndarray, bias: jnp.ndarray,
+                                 eps: float = 1e-6) -> jnp.ndarray:
+    """AFU residual-add + layernorm fused pass."""
+    h = x.astype(jnp.float32) + res.astype(jnp.float32)
+    mu = h.mean(-1, keepdims=True)
+    var = ((h - mu) ** 2).mean(-1, keepdims=True)
+    return (h - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def gelu_reference(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approx GELU (what a LUT+ALU datapath implements)."""
+    xf = x.astype(jnp.float32)
+    return 0.5 * xf * (1.0 + jnp.tanh(0.7978845608 * (xf + 0.044715 * xf ** 3)))

@@ -1,0 +1,77 @@
+"""DMM Pallas kernel: fused 4b-LUT non-uniform dequant + tiled matmul.
+
+TPU adaptation of the T-REX DMM core (DESIGN §2): the chip streams 4b codes
+from DRAM through a 16-entry LUT dequantizer straight into the PE array; here
+the nibble-packed codes stream HBM -> VMEM, are expanded and LUT-dequantized
+*inside* the kernel, and feed the MXU — the dense fp W_S tile never exists in
+HBM, so HBM weight traffic is exactly the compressed bytes (the paper's EMA
+claim, realized as the memory-roofline term).
+
+Layout contract (the TRF analogue): the output tile is produced in the
+(row-major M x N) layout the SMM kernel consumes as its (M x r) input, so no
+relayout op sits between the chained kernels.
+
+Grid: (M/bm, N/bn, K/bk), K innermost for accumulate-in-place.
+VMEM per step (defaults bm=bn=256, bk=512, bf16 x):
+  x tile 256x512x2 = 256 KiB, code tile 256x256 = 64 KiB,
+  dequant tile 512x256x4 = 512 KiB, out tile 256x256x4 = 256 KiB  (~1.1 MiB).
+MXU alignment: all tile dims multiples of 128 (bk/2 multiples of 128 too).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dmm_kernel(x_ref, codes_ref, lut_ref, o_ref, *, n_k: int):
+    k = pl.program_id(2)
+    # Unpack two nibbles per byte along K: (bk//2, bn) -> (bk, bn).
+    packed = codes_ref[...]
+    hi = (packed >> 4).astype(jnp.int32)
+    lo = (packed & 0xF).astype(jnp.int32)
+    codes = jnp.stack([hi, lo], axis=1).reshape(-1, packed.shape[1])
+    # 16-entry LUT dequant (the DMM core's non-uniform dequantizer).
+    w = jnp.take(lut_ref[...], codes, axis=0)  # (bk, bn) f32
+    partial = jnp.dot(x_ref[...].astype(jnp.float32), w,
+                      preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def dmm_matmul(x: jnp.ndarray, codes_packed: jnp.ndarray, lut: jnp.ndarray,
+               *, bm: int = 256, bn: int = 256, bk: int = 512,
+               interpret: bool = True) -> jnp.ndarray:
+    """y = x @ LUT[unpack(codes_packed)].
+
+    x (M, K) bf16/f32; codes_packed (K//2, N) uint8; lut (16,) f32 -> (M, N) f32.
+    M, N, K must be multiples of the tile sizes (ops.py pads).
+    """
+    M, K = x.shape
+    N = codes_packed.shape[1]
+    assert codes_packed.shape[0] * 2 == K
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    n_k = K // bk
+    grid = (M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_dmm_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+            pl.BlockSpec((bk // 2, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((16,), lambda m, n, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x, codes_packed, lut)

@@ -1,0 +1,35 @@
+"""Public op: LUT-dequant matmul with padding/unpadding around the kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.dmm.dmm import dmm_matmul
+from repro.kernels.dmm.ref import dmm_reference
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def lut_matmul(x: jnp.ndarray, codes_packed: jnp.ndarray, lut: jnp.ndarray,
+               *, bm: int = 256, bn: int = 256, bk: int = 512,
+               use_kernel: bool = True, interpret: bool = True) -> jnp.ndarray:
+    """y = x @ LUT[codes]; pads (M, N, K) up to tile multiples, then crops.
+
+    ``use_kernel=False`` routes to the pure-jnp reference (the path the
+    dry-run lowers, since Pallas targets TPU; on TPU hardware the kernel is
+    the default)."""
+    M, K = x.shape
+    N = codes_packed.shape[1]
+    if not use_kernel:
+        return dmm_reference(x, codes_packed, lut)
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    xp = _pad_to(_pad_to(x, bm_, 0), bk_, 1)
+    cp = _pad_to(_pad_to(codes_packed, bk_ // 2, 0), bn_, 1)
+    out = dmm_matmul(xp, cp, lut, bm=bm_, bn=bn_, bk=bk_, interpret=interpret)
+    return out[:M, :N]

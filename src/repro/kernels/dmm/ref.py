@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the DMM kernel: y = x @ LUT[codes].
+
+Mirrors the T-REX DMM core: a LUT-based non-uniform dequantizer feeding the
+MAC array. ``codes_packed`` stores two 4b codes per byte along the K axis
+(even K required), exactly the streamed format the chip reads.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def unpack_nibbles(packed: jnp.ndarray) -> jnp.ndarray:
+    """(K//2, N) uint8 -> (K, N) int32 in [0, 15]; row 2i from the high nibble."""
+    hi = (packed >> 4).astype(jnp.int32)
+    lo = (packed & 0xF).astype(jnp.int32)
+    return jnp.stack([hi, lo], axis=1).reshape(-1, packed.shape[1])
+
+
+def dmm_reference(x: jnp.ndarray, codes_packed: jnp.ndarray,
+                  lut: jnp.ndarray) -> jnp.ndarray:
+    """x (M, K) float; codes_packed (K//2, N) uint8; lut (16,) f32 -> (M, N) f32."""
+    codes = unpack_nibbles(codes_packed)
+    w = jnp.take(lut, codes, axis=0)  # (K, N) f32
+    return jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)

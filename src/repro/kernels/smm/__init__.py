@@ -1,0 +1,1 @@
+from repro.kernels.smm.ops import *  # noqa: F401,F403

@@ -1,0 +1,41 @@
+"""Public op: compressed-W_D matmul (the second MM of the paper's sequential
+pair), with padding and a reference escape hatch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.smm.ref import smm_reference
+from repro.kernels.smm.smm import smm_matmul
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def compressed_matmul(y: jnp.ndarray, first: jnp.ndarray, deltas: jnp.ndarray,
+                      vq: jnp.ndarray, scale, offset, *, bm: int = 256,
+                      bn: int = 256, use_kernel: bool = True,
+                      interpret: bool = True) -> jnp.ndarray:
+    """z = y @ densify(first, deltas, vq, scale, offset)."""
+    scale = jnp.asarray(scale, jnp.float32)
+    offset = jnp.asarray(offset, jnp.float32)
+    if not use_kernel:
+        return smm_reference(y, first, deltas, vq, scale, offset)
+    M, r = y.shape
+    N = vq.shape[1]
+    bm_, bn_ = min(bm, M), min(bn, N)
+    yp = _pad_to(y, bm_, 0)
+    # Column padding: replicate column 0's indices with zero values (offset
+    # would bias padded columns; they are cropped anyway, but keep them exact
+    # when offset == 0 and harmless otherwise).
+    fp = _pad_to(first, bn_, 0)
+    dp = _pad_to(deltas, bn_, 1)
+    vp = _pad_to(vq, bn_, 1)
+    out = smm_matmul(yp, fp, dp, vp, scale, offset, bm=bm_, bn=bn_,
+                     interpret=interpret)
+    return out[:M, :N]

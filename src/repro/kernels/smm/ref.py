@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the SMM kernel: z = y @ densify(W_D_compressed).
+
+W_D arrives in the T-REX streaming format (DESIGN §2):
+  first   (N,)       int32  absolute first row index per column
+  deltas  (nnz-1, N) uint8  delta-encoded remaining row indices
+  vq      (nnz, N)   uint8  6b uniform value codes
+  scale, offset      f32    per-layer dequant constants
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+VALUE_BITS = 6
+
+
+def decode_indices(first: jnp.ndarray, deltas: jnp.ndarray) -> jnp.ndarray:
+    """-> (nnz, N) absolute row indices (sorted ascending per column)."""
+    return jnp.concatenate(
+        [first[None].astype(jnp.int32),
+         first[None].astype(jnp.int32)
+         + jnp.cumsum(deltas.astype(jnp.int32), axis=0)], axis=0)
+
+
+def dequant_values(vq: jnp.ndarray, scale, offset) -> jnp.ndarray:
+    levels = (1 << VALUE_BITS) - 1
+    return vq.astype(jnp.float32) / levels * scale + offset
+
+
+def densify(first, deltas, vq, scale, offset, r: int) -> jnp.ndarray:
+    """Dense (r, N) reconstruction of the compressed W_D."""
+    idx = decode_indices(first, deltas)  # (nnz, N)
+    vals = dequant_values(vq, scale, offset)
+    n = idx.shape[1]
+    dense = jnp.zeros((r, n), jnp.float32)
+    cols = jnp.broadcast_to(jnp.arange(n), idx.shape)
+    return dense.at[idx.reshape(-1), cols.reshape(-1)].add(vals.reshape(-1))
+
+
+def smm_reference(y: jnp.ndarray, first, deltas, vq, scale, offset) -> jnp.ndarray:
+    """y (M, r) x compressed W_D (r, N) -> (M, N) f32."""
+    dense = densify(first, deltas, vq, scale, offset, y.shape[1])
+    return jnp.dot(y.astype(jnp.float32), dense,
+                   preferred_element_type=jnp.float32)

@@ -1,0 +1,2 @@
+"""Launcher layer: production mesh, sharding rules, step builders, the
+multi-pod dry-run, and the while-aware HLO roofline analyzer."""

@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on 512
+placeholder host devices and extract the roofline terms.
+
+The two lines above MUST stay the first statements in this module (jax locks
+the device count on first init) — do not move the docstring above them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+      --shape train_4k --mesh single            # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+  ... --factorized      # with the paper's factorization enabled
+
+Each cell writes experiments/dryrun/<arch>__<shape>__<mesh>[__fact].json with
+memory_analysis, cost_analysis, the while-aware HLO roofline terms
+(launch/hlo_analysis.py), and the collective schedule. Existing JSONs are
+skipped unless --force.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, list_archs, shapes_for
+from repro.launch import sharding as shd
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import devices_per_pod, make_production_mesh
+from repro.launch.steps import build_bundle
+
+# ---- TPU v5e roofline constants (assignment) ----
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link (1 effective link assumed; see EXPERIMENTS)
+DCI_BW = 5e9  # B/s per chip pod-crossing (documented assumption)
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); fwd-only steps use 2*N*D."""
+    info = SHAPES[shape_name]
+    tokens = info["batch"] * (1 if info["step"] == "decode" else info["seq"])
+    n = cfg.n_active_params()
+    mult = 6.0 if info["step"] == "train" else 2.0
+    return mult * n * tokens
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             factorized: bool = False, verbose: bool = True,
+             opt: bool = False, hlo_cache: "Path" = None) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    dpp = devices_per_pod(mesh)
+    n_chips = mesh.devices.size
+    overrides = {}
+    if SHAPES[shape_name]["step"] != "train":
+        overrides["param_dtype"] = "bfloat16"  # inference weights are bf16
+    if opt:  # beyond-paper optimized variant (EXPERIMENTS §Perf)
+        overrides["unroll_decode"] = True
+        overrides["constrain_acts"] = True
+        overrides["flash_block_dtype"] = "bfloat16"
+        overrides["attn_chunk"] = 1024
+    cfg = get_config(arch, "full", factorized=factorized, **overrides)
+    bundle = build_bundle(cfg, shape_name, mesh)
+
+    t0 = time.time()
+    with mesh:
+        jf = jax.jit(bundle.fn,
+                     in_shardings=bundle.in_shardings,
+                     out_shardings=bundle.out_shardings,
+                     donate_argnums=bundle.donate_argnums)
+        lowered = jf.lower(*bundle.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    if hlo_cache is not None:
+        import gzip
+        with gzip.open(hlo_cache, "wt") as f:
+            f.write(compiled.as_text())
+
+    mem = compiled.memory_analysis()
+    if verbose:
+        print(compiled.memory_analysis())   # proves it fits (per device)
+        print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+               if k in ("flops", "bytes accessed")})
+    cost = compiled.cost_analysis() or {}
+    hlo = analyze_hlo(compiled.as_text(), devices_per_pod=dpp)
+
+    # Per-chip roofline terms (analyzer outputs are per-chip already).
+    t_compute = hlo.flops / PEAK_FLOPS
+    t_memory = hlo.bytes / HBM_BW
+    t_coll = hlo.ici_bytes / ICI_BW + hlo.dci_bytes / DCI_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    mflops = model_flops(cfg, shape_name)
+    hlo_flops_global = hlo.flops * n_chips
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "factorized": factorized, "opt": opt,
+        "step": SHAPES[shape_name]["step"],
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+            "peak_per_chip_gb": round(
+                (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                 + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30,
+                3),
+        },
+        "xla_cost_analysis": {
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+        },
+        "hlo_analysis": {
+            "flops_per_chip": hlo.flops,
+            "bytes_per_chip": hlo.bytes,
+            "collective_bytes": hlo.collective_bytes,
+            "ici_bytes_per_chip": hlo.ici_bytes,
+            "dci_bytes_per_chip": hlo.dci_bytes,
+            "warnings": hlo.warnings[:8],
+        },
+        "roofline": {
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_collective_s": t_coll,
+            "dominant": dominant,
+            "step_time_bound_s": max(t_compute, t_memory, t_coll),
+        },
+        "model_flops_6nd": mflops,
+        "useful_flops_ratio": (mflops / hlo_flops_global
+                               if hlo_flops_global else 0.0),
+        "roofline_fraction": (
+            (mflops / n_chips / PEAK_FLOPS)
+            / max(t_compute, t_memory, t_coll)
+            if max(t_compute, t_memory, t_coll) > 0 else 0.0),
+    }
+    return rec
+
+
+def cell_path(arch, shape, mesh_kind, factorized, opt=False) -> Path:
+    tag = f"{arch}__{shape}__{mesh_kind}" + ("__fact" if factorized else "") \
+        + ("__opt" if opt else "")
+    return OUT_DIR / f"{tag}.json"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--factorized", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="beyond-paper optimized variant (§Perf)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    cells = []
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        for arch in list_archs():
+            for shape in shapes_for(arch):
+                for mk in meshes:
+                    cells.append((arch, shape, mk))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        for mk in meshes:
+            cells.append((args.arch, args.shape, mk))
+
+    failures = 0
+    for arch, shape, mk in cells:
+        path = cell_path(arch, shape, mk, args.factorized, args.opt)
+        if path.exists() and not args.force:
+            print(f"[skip] {path.name}")
+            continue
+        print(f"[run ] {arch} x {shape} x {mk}"
+              + (" (factorized)" if args.factorized else "")
+              + (" (opt)" if args.opt else ""), flush=True)
+        try:
+            rec = run_cell(arch, shape, mk, factorized=args.factorized,
+                           opt=args.opt,
+                           hlo_cache=path.with_suffix(".hlo.gz"))
+            path.write_text(json.dumps(rec, indent=1))
+            r = rec["roofline"]
+            print(f"  ok: dominant={r['dominant']} "
+                  f"compute={r['t_compute_s']:.3e}s "
+                  f"memory={r['t_memory_s']:.3e}s "
+                  f"coll={r['t_collective_s']:.3e}s "
+                  f"mem/chip={rec['memory']['peak_per_chip_gb']}GB "
+                  f"roofline_frac={rec['roofline_fraction']:.3f}",
+                  flush=True)
+        except Exception:
+            failures += 1
+            err = traceback.format_exc()
+            print(f"  FAIL {arch} {shape} {mk}:\n{err[-2000:]}", flush=True)
+            (OUT_DIR / (path.stem + ".FAILED")).write_text(err)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh construction (assignment spec).
+
+Axes: ``data`` (DP/FSDP + MoE expert parallelism), ``model`` (TP), and for
+multi-pod runs a leading ``pod`` axis (pure data parallel across the
+data-center interconnect). Functions, not module constants — importing this
+module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "devices_per_pod"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def devices_per_pod(mesh: jax.sharding.Mesh) -> int:
+    """Device-id span of one pod (0 when the mesh has no pod axis)."""
+    if "pod" not in mesh.axis_names:
+        return 0
+    return mesh.devices.size // mesh.shape["pod"]

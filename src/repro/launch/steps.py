@@ -1,0 +1,194 @@
+"""Step builders (train / prefill / decode) + ShapeDtypeStruct input specs.
+
+These are the functions the dry-run lowers and the real launcher executes.
+``input_specs`` follows the assignment: weak-type-correct ShapeDtypeStructs,
+no device allocation; ``decode_*``/``long_*`` shapes lower ``serve_step``
+(one new token against a seq_len cache), ``train_4k`` lowers ``train_step``,
+``prefill_32k`` lowers the inference prefill.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES
+from repro.launch import sharding as shd
+from repro.models.common import ModelConfig
+from repro.models.transformer import Model
+from repro.optim import OptConfig, apply_updates, init_opt_state
+
+__all__ = ["StepBundle", "make_train_step", "make_prefill_step",
+           "make_serve_step", "batch_shapes", "build_bundle",
+           "train_state_shapes"]
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything the dry-run needs: the jittable fn, arg shape structs, and
+    shardings."""
+
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+
+# --------------------------------------------------------------------------
+# Input shapes per (cfg, shape cell)
+# --------------------------------------------------------------------------
+
+
+def batch_shapes(cfg: ModelConfig, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    sds = jax.ShapeDtypeStruct
+    if info["step"] == "decode":
+        if cfg.external_embeddings:
+            batch = {"embeds": sds((B, 1, cfg.d_model), jnp.bfloat16)}
+        else:
+            batch = {"inputs": sds((B, 1), jnp.int32)}
+        return batch
+    if cfg.external_embeddings:
+        batch = {"embeds": sds((B, S, cfg.d_model), jnp.bfloat16)}
+    else:
+        batch = {"inputs": sds((B, S), jnp.int32)}
+    if info["step"] == "train":
+        lbl = (B, S, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, S)
+        batch["labels"] = sds(lbl, jnp.int32)
+    return batch
+
+
+def train_state_shapes(model: Model, opt_cfg: OptConfig):
+    def init(key):
+        params = model.init(key)
+        return {"params": params,
+                "opt": init_opt_state(params, opt_cfg),
+                "step": jnp.zeros((), jnp.int32)}
+    return jax.eval_shape(init, jax.random.key(0))
+
+
+# --------------------------------------------------------------------------
+# Steps
+# --------------------------------------------------------------------------
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig, mesh=None,
+                    sparse_train: bool = False,
+                    project_fn: Optional[Callable] = None) -> Callable:
+    def train_step(state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch, mesh=mesh, sparse_train=sparse_train)
+
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"])
+        new_params, new_opt, stats = apply_updates(
+            state["params"], grads, state["opt"], state["step"], opt_cfg,
+            project_fn=project_fn)
+        metrics.update(stats)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, mesh=None) -> Callable:
+    def prefill_step(params, batch):
+        logits, caches = model.prefill(params, batch, mesh=mesh)
+        # Serving returns the last-position logits + the filled cache.
+        return logits[:, -1], caches
+
+    return prefill_step
+
+
+def make_serve_step(model: Model, mesh=None) -> Callable:
+    def serve_step(params, batch, caches, cache_index):
+        logits, new_caches = model.decode_step(params, batch, caches,
+                                               cache_index, mesh=mesh)
+        return logits[:, 0], new_caches
+
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# Bundles (fn + shapes + shardings) per cell
+# --------------------------------------------------------------------------
+
+
+def build_bundle(cfg: ModelConfig, shape_name: str, mesh,
+                 opt_cfg: Optional[OptConfig] = None,
+                 sparse_train: bool = False) -> StepBundle:
+    info = SHAPES[shape_name]
+    model = Model(cfg)
+    pshapes = model.param_shapes()
+    pspecs = shd.param_specs(pshapes, mesh)
+    psh = shd.named(pspecs, mesh)
+    batch = batch_shapes(cfg, shape_name)
+    bsh = shd.named(shd.batch_spec(batch, mesh), mesh)
+    repl = jax.sharding.NamedSharding(mesh, P())
+
+    if info["step"] == "train":
+        opt_cfg = opt_cfg or OptConfig()
+        state = jax.eval_shape(
+            lambda: {"params": pshapes,
+                     "opt": init_opt_state(pshapes, opt_cfg),
+                     "step": jnp.zeros((), jnp.int32)})
+        ospecs = shd.opt_state_specs(shd.param_specs(pshapes, mesh), mesh,
+                                     param_shapes=pshapes)
+        state_sh = {"params": psh,
+                    "opt": _opt_shardings(state["opt"], ospecs, mesh),
+                    "step": repl}
+        fn = make_train_step(Model(cfg), opt_cfg, mesh=mesh,
+                             sparse_train=sparse_train)
+        metrics_sh = None  # let GSPMD choose (scalars)
+        return StepBundle(
+            name=f"train:{cfg.name}:{shape_name}",
+            fn=fn, args=(state, batch),
+            in_shardings=(state_sh, bsh),
+            out_shardings=(state_sh, metrics_sh),
+            donate_argnums=(0,),
+        )
+
+    B, S = info["batch"], info["seq"]
+    if info["step"] == "prefill":
+        fn = make_prefill_step(model, mesh=mesh)
+        cache = jax.eval_shape(lambda: model.init_cache(B, S))
+        csh = shd.named(shd.cache_specs(cache, mesh, cfg.uniform_layers), mesh)
+        return StepBundle(
+            name=f"prefill:{cfg.name}:{shape_name}",
+            fn=fn, args=(pshapes, batch),
+            in_shardings=(psh, bsh),
+            out_shardings=(None, csh),
+        )
+
+    # decode: batch over dp, cache (B over dp) x (S over model) => every chip
+    # holds cache/n_chips; the slot write is a one-hot select (layers.py), so
+    # no gather materializes. Weights stay 2D-sharded (reads = params/chips).
+    fn = make_serve_step(model, mesh=mesh)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    csh = shd.named(shd.cache_specs(cache, mesh, cfg.uniform_layers), mesh)
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    return StepBundle(
+        name=f"decode:{cfg.name}:{shape_name}",
+        fn=fn, args=(pshapes, batch, cache, idx),
+        in_shardings=(psh, bsh, csh, repl),
+        out_shardings=(None, csh),
+        donate_argnums=(2,),
+    )
+
+
+def _opt_shardings(opt_shapes, pspecs_widened, mesh):
+    """Optimizer-state shardings. AdamW m/v mirror the (pod-widened) param
+    specs exactly; Adafactor's factored stats have reduced shapes, so they
+    fall back to GSPMD auto (None shardings)."""
+    if set(opt_shapes.keys()) == {"m", "v"}:
+        return {key: shd.named(pspecs_widened, mesh) for key in ("m", "v")}
+    return jax.tree.map(lambda _: None, opt_shapes,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

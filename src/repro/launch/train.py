@@ -1,0 +1,76 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-32b \
+      --variant smoke --steps 200 [--factorized] [--ckpt DIR] \
+      [--mesh-data N --mesh-model M]
+
+Real runs use the production mesh (launch/mesh.py) on TPU; on a dev host the
+local mesh spans however many devices exist. The loop (train/loop.py) brings
+checkpoint/restart, the NaN/spike guard, and the paper's dense->sparse
+schedule.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.core.factorized import FactorizationConfig
+from repro.data import lm_batches
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models.transformer import Model
+from repro.optim import OptConfig
+from repro.train import TrainLoopConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--variant", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--factorized", action="store_true")
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adafactor"])
+    ap.add_argument("--ckpt", default="checkpoints")
+    ap.add_argument("--mesh-data", type=int, default=0)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, args.variant)
+    if args.factorized:
+        cfg = dataclasses.replace(
+            cfg, factorization=FactorizationConfig(
+                enabled=True, min_dim=32 if args.variant == "smoke" else 256))
+    model = Model(cfg)
+
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    elif args.mesh_data:
+        mesh = make_local_mesh(args.mesh_data, args.mesh_model)
+    else:
+        mesh = None
+
+    data = lm_batches(cfg.vocab_size, args.batch, args.seq,
+                      n_codebooks=cfg.n_codebooks)
+    out = train(
+        model, data,
+        OptConfig(name=args.optimizer, lr=args.lr, warmup_steps=10,
+                  total_steps=args.steps),
+        TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt,
+                        ckpt_every=max(args.steps // 4, 1),
+                        sparse_from_step=args.steps // 3
+                        if args.factorized else 10**9),
+        mesh=mesh)
+    print(f"done: final loss {out['history'][-1]['loss']:.4f}, "
+          f"checkpoints in {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

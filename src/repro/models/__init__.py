@@ -1,0 +1,2 @@
+from repro.models.common import ModelConfig, MoEConfig, RGLRUConfig, SSMConfig  # noqa: F401
+from repro.models.transformer import Model  # noqa: F401

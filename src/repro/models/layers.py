@@ -1,0 +1,630 @@
+"""Shared neural layers: norms, RoPE, chunked flash attention (pure JAX),
+GQA attention blocks with KV caches, FFNs — all factorization-aware.
+
+Design notes
+------------
+* Pure functions over parameter pytrees (no module framework is installed).
+* Attention is a chunked, numerically-stable online-softmax ("flash in JAX"):
+  an outer `lax.scan` over query chunks and an inner `lax.scan` /
+  `fori`-free windowed gather over key-value chunks, so the S x S score
+  matrix is never materialized — required for the 32k prefill shapes to fit.
+* Sliding-window ("local") attention only visits the ceil(W/chunk)+1
+  kv-chunks a query chunk can see — O(S*W) flops, static trip counts (the
+  roofline analyzer multiplies loop bodies by trip count, so static structure
+  keeps the accounting exact).
+* Packed sequences (dynamic batching, the paper's technique) thread
+  ``seg_ids`` through every mask.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.factorized import (
+    DictionaryBank,
+    FactorizationConfig,
+    apply_linear,
+    init_linear,
+)
+from repro.models.common import ModelConfig
+
+NEG_INF = -1e30
+
+
+def constrain_batch(x: jnp.ndarray, mesh,
+                    model_dim: Optional[int] = None) -> jnp.ndarray:
+    """Pin the batch dim to the data-parallel axes (and optionally one wide
+    feature dim to ``model``). GSPMD's propagation can drop the batch
+    sharding inside nested scans (observed on the flash loops: full-batch f32
+    score blocks on every chip — EXPERIMENTS §Dry-run); an explicit
+    constraint at the attention inputs keeps it. The model-dim pin makes
+    GSPMD prefer gathering weights over all-reducing big activations
+    (§Perf, starcoder2 prefill)."""
+    if mesh is None:
+        return x
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    if not dp or x.shape[0] % size != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = dp
+    if model_dim is not None:
+        md = model_dim % x.ndim
+        if md != 0 and x.shape[md] % mesh.shape["model"] == 0:
+            spec[md] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(*spec)))
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), cfg.params_dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.params_dtype)
+    return p
+
+
+def apply_norm(p: Dict[str, jnp.ndarray], x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        var = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_tables(positions: jnp.ndarray, dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for given integer positions: (..., dim//2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, D); cos/sin: (B, S, D//2) — rotate pairs (even, odd)."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    out = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Chunked flash attention (pure JAX)
+# --------------------------------------------------------------------------
+
+
+def _chunk(x: jnp.ndarray, n: int, c: int) -> jnp.ndarray:
+    return x.reshape(x.shape[0], n, c, *x.shape[2:])
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, Hq, D)
+    k: jnp.ndarray,  # (B, Skv, Hkv, D)
+    v: jnp.ndarray,  # (B, Skv, Hkv, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 512,
+    seg_q: Optional[jnp.ndarray] = None,  # (B, Sq) int, 0 = padding
+    seg_kv: Optional[jnp.ndarray] = None,
+    block_dtype=jnp.float32,  # probability-block dtype (stats stay f32)
+    wedge: bool = False,  # static causal-triangle decomposition (§Perf)
+) -> jnp.ndarray:
+    """Online-softmax attention without materializing (Sq, Skv).
+
+    Full (windowless) attention scans every kv chunk for every q chunk and
+    masks — the causal upper triangle is computed-and-masked (a known 2x
+    compute waste; see EXPERIMENTS §Perf for the wedge-schedule optimization).
+    Windowed attention visits only the kv chunks the window can reach.
+    """
+    B, Sq0, Hq, D = q.shape
+    Skv0, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    c = min(chunk, Sq0, Skv0)
+
+    if seg_q is None:
+        seg_q = jnp.ones((B, Sq0), jnp.int32)
+    if seg_kv is None:
+        seg_kv = jnp.ones((B, Skv0), jnp.int32)
+
+    # Pad to chunk multiples; padding rides segment id 0 => fully masked.
+    def pad_s(x, target):
+        if x.shape[1] == target:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[1] = (0, target - x.shape[1])
+        return jnp.pad(x, widths)
+
+    Sq = ((Sq0 + c - 1) // c) * c
+    Skv = ((Skv0 + c - 1) // c) * c
+    q, k, v = pad_s(q, Sq), pad_s(k, Skv), pad_s(v, Skv)
+    seg_q, seg_kv = pad_s(seg_q, Sq), pad_s(seg_kv, Skv)
+    nq, nk = Sq // c, Skv // c
+    scale = 1.0 / np.sqrt(D)
+
+    qc = _chunk(q, nq, c).reshape(B, nq, c, Hkv, G, D)
+    kc = _chunk(k, nk, c)
+    vc = _chunk(v, nk, c)
+    sq = _chunk(seg_q[..., None], nq, c)[..., 0]  # (B, nq, c)
+    sk = _chunk(seg_kv[..., None], nk, c)[..., 0]
+
+    kv_offset = Skv0 - Sq0  # decode-style alignment: q tokens sit at the end
+
+    def score_block(qi, ki, q_blk, k_blk, sq_blk, sk_blk):
+        # q_blk: (B, c, Hkv, G, D); k_blk: (B, c, Hkv, D)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        iq = qi * c + jax.lax.iota(jnp.int32, c) + kv_offset
+        ik = ki * c + jax.lax.iota(jnp.int32, c)
+        m = (sq_blk[:, :, None] == sk_blk[:, None, :]) & (sq_blk[:, :, None] > 0)
+        if causal:
+            m &= iq[:, None] >= ik[None, :]
+        if window is not None:
+            m &= (iq[:, None] - ik[None, :]) < window
+        return jnp.where(m[:, None, None], s, NEG_INF)
+
+    def kv_step(carry, ki_and_blk):
+        o, m, l, qi, q_blk, sq_blk = carry
+        ki, k_blk, v_blk, sk_blk = ki_and_blk
+        s = score_block(qi, ki, q_blk, k_blk, sq_blk, sk_blk)  # (B,Hkv,G,c,c)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1)
+        # Probability block in reduced precision: halves the dominant flash
+        # HBM traffic; the online-softmax stats (m, l) and the o accumulator
+        # stay f32 (§Perf cell A).
+        o = o * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(block_dtype), v_blk,
+            preferred_element_type=jnp.float32)
+        return (o, m_new, l, qi, q_blk, sq_blk), None
+
+    w_chunks = None if window is None else (window + c - 1) // c  # lookback
+
+    def q_step(_, inputs):
+        qi, q_blk, sq_blk = inputs
+        o0 = jnp.zeros((B, Hkv, G, c, D), jnp.float32)
+        m0 = jnp.full((B, Hkv, G, c), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, c), jnp.float32)
+        carry = (o0, m0, l0, qi, q_blk, sq_blk)
+        if window is None:
+            xs = (jnp.arange(nk), kc.transpose(1, 0, 2, 3, 4),
+                  vc.transpose(1, 0, 2, 3, 4), sk.transpose(1, 0, 2))
+            carry, _ = jax.lax.scan(kv_step, carry, xs)
+        else:
+            # Only the w_chunks+1 reachable kv chunks; indices may underflow 0
+            # and are masked via a sentinel segment (0 never matches seg>=1).
+            q_kv_idx = qi + (kv_offset // c)
+            for t in range(w_chunks + 1):
+                ki = q_kv_idx - w_chunks + t
+                ki_c = jnp.clip(ki, 0, nk - 1)
+                k_blk = jax.lax.dynamic_index_in_dim(
+                    kc, ki_c, axis=1, keepdims=False)
+                v_blk = jax.lax.dynamic_index_in_dim(
+                    vc, ki_c, axis=1, keepdims=False)
+                sk_blk = jax.lax.dynamic_index_in_dim(
+                    sk, ki_c, axis=1, keepdims=False)
+                sk_blk = jnp.where(ki < 0, 0, sk_blk)
+                carry, _ = kv_step(carry, (ki_c, k_blk, v_blk, sk_blk))
+        o, m, l, *_ = carry
+        o = o / jnp.maximum(l[..., None], 1e-30)
+        return None, o  # (B, Hkv, G, c, D)
+
+    if wedge and causal and window is None and Sq == Skv and nq > 2:
+        # ---- causal wedge: recursive static triangle decomposition.
+        # causal(n) = causal(n/2 upper-left) + FULL rectangle (lower-left)
+        #           + causal(n/2 lower-right); leaves (<=2 chunks) stay
+        # masked. Visits ~(1/2 + 1/nq) of the chunk grid instead of all of
+        # it: ~2x fewer attention FLOPs and block traffic at 4k (§Perf).
+        def tasks(lo, hi):
+            n = hi - lo
+            if n <= 2:
+                return [(lo, hi, lo, hi)]
+            h = n // 2
+            return (tasks(lo, lo + h)
+                    + [(lo + h, hi, lo, lo + h)]  # full rectangle
+                    + tasks(lo + h, hi))
+
+        def run_range(qi, klo, khi):
+            """(o, m, l) for q chunk qi over kv chunks [klo, khi)."""
+            q_blk = qc[:, qi]
+            sq_blk = sq[:, qi]
+            o0 = jnp.zeros((B, Hkv, G, c, D), jnp.float32)
+            m0 = jnp.full((B, Hkv, G, c), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((B, Hkv, G, c), jnp.float32)
+            carry = (o0, m0, l0, qi, q_blk, sq_blk)
+            xs = (jnp.arange(klo, khi),
+                  kc[:, klo:khi].transpose(1, 0, 2, 3, 4),
+                  vc[:, klo:khi].transpose(1, 0, 2, 3, 4),
+                  sk[:, klo:khi].transpose(1, 0, 2))
+            carry, _ = jax.lax.scan(kv_step, carry, xs)
+            return carry[0], carry[1], carry[2]
+
+        run_range = jax.checkpoint(
+            run_range, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(0, 1, 2))
+        o_parts = [None] * nq  # (o, m, l) accumulated per q chunk
+        for (qlo, qhi, klo, khi) in tasks(0, nq):
+            for qi in range(qlo, qhi):
+                o2, m2, l2 = run_range(qi, klo, khi)
+                if o_parts[qi] is None:
+                    o_parts[qi] = (o2, m2, l2)
+                else:  # online-softmax merge of two kv ranges
+                    o1, m1, l1 = o_parts[qi]
+                    m = jnp.maximum(m1, m2)
+                    a1 = jnp.exp(m1 - m)
+                    a2 = jnp.exp(m2 - m)
+                    o_parts[qi] = (o1 * a1[..., None] + o2 * a2[..., None],
+                                   m, l1 * a1 + l2 * a2)
+        outs = []
+        for qi in range(nq):
+            o, m, l = o_parts[qi]
+            outs.append(o / jnp.maximum(l[..., None], 1e-30))
+        outs = jnp.stack(outs)  # (nq, B, Hkv, G, c, D)
+        out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, Hq, D)
+        return out[:, :Sq0].astype(q.dtype)
+
+    # Flash backward = recompute: without this checkpoint the nested scans
+    # save every block's scores/probs as residuals (O(S^2) memory, hundreds
+    # of GB/chip at 4k x 256 — see EXPERIMENTS §Dry-run).
+    q_step = jax.checkpoint(
+        q_step, policy=jax.checkpoint_policies.nothing_saveable)
+    _, outs = jax.lax.scan(
+        q_step, None,
+        (jnp.arange(nq), qc.transpose(1, 0, 2, 3, 4, 5), sq.transpose(1, 0, 2)),
+    )
+    # outs: (nq, B, Hkv, G, c, D) -> (B, Sq, Hq, D)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, Hq, D)
+    return out[:, :Sq0].astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, 1, Hq, D)
+    k_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    v_cache: jnp.ndarray,
+    cache_index: jnp.ndarray,  # scalar int32: number of valid cache slots
+    *,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Single-token attention against a (possibly ring-buffered) KV cache."""
+    B, S, Hkv, D = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S)
+    valid = pos < cache_index
+    if window is not None:
+        valid &= pos >= (cache_index - window)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention block (GQA + RoPE + cache), factorization-aware
+# --------------------------------------------------------------------------
+
+
+def init_attention(key: jax.Array, cfg: ModelConfig, bank: Optional[DictionaryBank],
+                   prefix: str = "attn") -> Dict:
+    d = cfg.d_model
+    hd = cfg.head_dim
+    fcfg = cfg.factorization
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d, cfg.n_heads * hd, fcfg, bank, f"{prefix}_q",
+                          use_bias=cfg.qkv_bias, dtype=cfg.params_dtype),
+        "wk": init_linear(ks[1], d, cfg.kv_heads * hd, fcfg, bank, f"{prefix}_k",
+                          use_bias=cfg.qkv_bias, dtype=cfg.params_dtype),
+        "wv": init_linear(ks[2], d, cfg.kv_heads * hd, fcfg, bank, f"{prefix}_v",
+                          use_bias=cfg.qkv_bias, dtype=cfg.params_dtype),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, d, fcfg, bank, f"{prefix}_o",
+                          dtype=cfg.params_dtype),
+    }
+
+
+def attention_block(
+    p: Dict,
+    x: jnp.ndarray,  # (B, S, d)
+    *,
+    cfg: ModelConfig,
+    dicts: Optional[Dict],
+    positions: jnp.ndarray,  # (B, S) within-segment positions (RoPE)
+    seg_ids: Optional[jnp.ndarray],  # (B, S)
+    window: Optional[int] = None,
+    cache: Optional[Dict] = None,  # {"k","v"} (L?, B, S_max, Hkv, D)
+    cache_index: Optional[jnp.ndarray] = None,
+    layer_idx: Optional[jnp.ndarray] = None,  # set when cache is L-stacked
+    kv: Optional[jnp.ndarray] = None,  # cross-attention memory (B, Skv, d)
+    seg_kv: Optional[jnp.ndarray] = None,
+    sparse_train: bool = False,
+    prefix: str = "attn",
+    mesh=None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, S, d = x.shape
+    hd = cfg.head_dim
+    fcfg = cfg.factorization
+    dt = cfg.compute_dtype
+
+    def lin(name, inp, fam):
+        return apply_linear(p[name], inp, dicts, fam, fcfg, sparse_train).astype(dt)
+
+    x_kv = kv if kv is not None else x
+    q = lin("wq", x, f"{prefix}_q").reshape(B, S, cfg.n_heads, hd)
+    k = lin("wk", x_kv, f"{prefix}_k").reshape(B, x_kv.shape[1], cfg.kv_heads, hd)
+    v = lin("wv", x_kv, f"{prefix}_v").reshape(B, x_kv.shape[1], cfg.kv_heads, hd)
+    mdim = 2 if cfg.constrain_acts else None
+    q, k, v = (constrain_batch(t, mesh, model_dim=mdim) for t in (q, k, v))
+
+    if cfg.rope and kv is None:
+        cos, sin = rope_tables(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    def write(buf, upd, starts):
+        """In-place DUS into the (possibly L-stacked) cache buffer. The
+        update region is the only write traffic — stacked caches ride the
+        layer-scan carry, never its ys (which would copy the whole cache
+        per layer — see EXPERIMENTS §Dry-run)."""
+        upd = upd.astype(buf.dtype)
+        if layer_idx is not None:
+            upd = upd[None]
+            starts = (layer_idx,) + starts
+        return jax.lax.dynamic_update_slice(buf, upd, starts)
+
+    def layer_view(buf):
+        if layer_idx is None:
+            return buf
+        return jax.lax.dynamic_index_in_dim(buf, layer_idx, 0, keepdims=False)
+
+    def kv_quantize(t):
+        """(B, S', H, D) -> int8 codes + per-(token, head) scales."""
+        amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) + 1e-6
+        scale = (amax / 127.0).astype(jnp.float32)
+        q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                     -127, 127).astype(jnp.int8)
+        return q, scale
+
+    def kv_dequantize(q, scale):
+        return (q.astype(jnp.float32) * scale[..., None]).astype(dt)
+
+    new_cache = None
+    ring = cache["k"].shape[-3] if cache is not None else 0
+    quant = cache is not None and "k_scale" in cache
+    if cache is not None and S == 1:
+        # Decode: write this step's K/V at cache_index (ring for windowed).
+        # The slot write is a one-hot select over S — a dynamic-update-slice
+        # at a traced slot on the sharded S axis would force GSPMD to gather
+        # the whole cache every layer (EXPERIMENTS §Dry-run). The layer slice
+        # is read/written via DUS that is dynamic only on the unsharded L.
+        slot = cache_index if window is None else cache_index % ring
+        hot = (jax.lax.iota(jnp.int32, ring) == slot)[None, :, None, None]
+
+        def slot_write_nd(buf, new):
+            lv = layer_view(buf)
+            hb = hot.reshape((1, ring) + (1,) * (lv.ndim - 2))
+            lv = jnp.where(hb, new.astype(buf.dtype), lv)
+            if layer_idx is None:
+                return lv
+            return jax.lax.dynamic_update_slice(
+                buf, lv[None], (layer_idx,) + (0,) * lv.ndim)
+
+        if quant:
+            kq, ks = kv_quantize(k)
+            vq, vs = kv_quantize(v)
+            new_cache = {"k": slot_write_nd(cache["k"], kq),
+                         "v": slot_write_nd(cache["v"], vq),
+                         "k_scale": slot_write_nd(cache["k_scale"], ks),
+                         "v_scale": slot_write_nd(cache["v_scale"], vs)}
+            kc = kv_dequantize(layer_view(new_cache["k"]),
+                               layer_view(new_cache["k_scale"]))
+            vc = kv_dequantize(layer_view(new_cache["v"]),
+                               layer_view(new_cache["v_scale"]))
+        else:
+            kc_all = slot_write_nd(cache["k"], k)
+            vc_all = slot_write_nd(cache["v"], v)
+            new_cache = {"k": kc_all, "v": vc_all}
+            kc, vc = layer_view(kc_all), layer_view(vc_all)
+        if window is None:
+            o = decode_attention(q, kc, vc, cache_index + 1)
+        else:
+            # Ring buffer: all slots < min(cache_index+1, ring) are valid.
+            o = decode_attention(q, kc, vc, jnp.minimum(cache_index + 1, ring),
+                                 window=None)
+        o = o.reshape(B, S, cfg.n_heads * hd)
+    else:
+        if cache is not None:  # prefill writing the cache
+            kw = k if k.shape[1] <= ring else k[:, -ring:]
+            vw = v if v.shape[1] <= ring else v[:, -ring:]
+            if quant:
+                kq, ks = kv_quantize(kw)
+                vq, vs = kv_quantize(vw)
+                new_cache = {"k": write(cache["k"], kq, (0, 0, 0, 0)),
+                             "v": write(cache["v"], vq, (0, 0, 0, 0)),
+                             "k_scale": write(cache["k_scale"], ks, (0, 0, 0)),
+                             "v_scale": write(cache["v_scale"], vs, (0, 0, 0))}
+            else:
+                new_cache = {"k": write(cache["k"], kw, (0, 0, 0, 0)),
+                             "v": write(cache["v"], vw, (0, 0, 0, 0))}
+        o = flash_attention(
+            q, k, v,
+            causal=cfg.causal and kv is None,
+            window=window,
+            chunk=cfg.attn_chunk,
+            seg_q=seg_ids,
+            seg_kv=seg_kv if kv is not None else seg_ids,
+            block_dtype=jnp.dtype(cfg.flash_block_dtype),
+            wedge=cfg.causal_wedge,
+        ).reshape(B, S, cfg.n_heads * hd)
+
+    y = apply_linear(p["wo"], o, dicts, f"{prefix}_o", fcfg, sparse_train)
+    return y.astype(dt), new_cache
+
+
+# --------------------------------------------------------------------------
+# FFN
+# --------------------------------------------------------------------------
+
+
+def init_ffn(key: jax.Array, cfg: ModelConfig, bank: Optional[DictionaryBank],
+             d_ff: Optional[int] = None, prefix: str = "ffn") -> Dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    fcfg = cfg.factorization
+    ks = jax.random.split(key, 3)
+    p = {"w_up": init_linear(ks[0], d, f, fcfg, bank, f"{prefix}_up",
+                             dtype=cfg.params_dtype),
+         "w_down": init_linear(ks[1], f, d, fcfg, bank, f"{prefix}_down",
+                               dtype=cfg.params_dtype)}
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = init_linear(ks[2], d, f, fcfg, bank, f"{prefix}_gate",
+                                  dtype=cfg.params_dtype)
+    return p
+
+
+def ffn_block(p: Dict, x: jnp.ndarray, *, cfg: ModelConfig, dicts: Optional[Dict],
+              sparse_train: bool = False, prefix: str = "ffn",
+              mesh=None) -> jnp.ndarray:
+    fcfg = cfg.factorization
+    dt = cfg.compute_dtype
+
+    def lin(name, inp, fam):
+        return apply_linear(p[name], inp, dicts, fam, fcfg, sparse_train).astype(dt)
+
+    up = lin("w_up", x, f"{prefix}_up")
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(lin("w_gate", x, f"{prefix}_gate")) * up
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(lin("w_gate", x, f"{prefix}_gate")) * up
+    else:
+        h = jax.nn.gelu(up)
+    if cfg.constrain_acts:
+        h = constrain_batch(h, mesh, model_dim=-1)
+    return lin("w_down", h, f"{prefix}_down")
+
+
+# --------------------------------------------------------------------------
+# Embeddings / logits
+# --------------------------------------------------------------------------
+
+
+def init_embedding(key: jax.Array, cfg: ModelConfig) -> Dict:
+    p = {}
+    if not cfg.external_embeddings:
+        p["tok"] = (jax.random.normal(key, (cfg.vocab_size, cfg.d_model),
+                                      cfg.params_dtype) * 0.02)
+    if cfg.learned_pos:
+        p["pos"] = (jax.random.normal(key, (cfg.max_len, cfg.d_model),
+                                      cfg.params_dtype) * 0.02)
+    return p
+
+
+def embed_tokens(p: Dict, tokens: jnp.ndarray, cfg: ModelConfig,
+                 positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    x = jnp.take(p["tok"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.learned_pos and positions is not None:
+        x = x + jnp.take(p["pos"], positions, axis=0).astype(cfg.compute_dtype)
+    return x
+
+
+def init_lm_head(key: jax.Array, cfg: ModelConfig) -> Dict:
+    if cfg.tie_embeddings:
+        return {}
+    n_heads = cfg.n_codebooks
+    shape = (cfg.d_model, cfg.vocab_size)
+    if n_heads > 1:
+        shape = (n_heads,) + shape
+    return {"w": jax.random.normal(key, shape, cfg.params_dtype)
+            / np.sqrt(cfg.d_model)}
+
+
+def lm_logits(p_head: Dict, p_embed: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.tie_embeddings:
+        return xf @ p_embed["tok"].astype(jnp.float32).T
+    w = p_head["w"].astype(jnp.float32)
+    if cfg.n_codebooks > 1:
+        return jnp.einsum("bsd,cdv->bscv", xf, w)
+    return xf @ w
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean xent over weighted positions. logits (..., V), labels (...)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if weights is None:
+        return nll.mean()
+    return (nll * weights).sum() / jnp.maximum(weights.sum(), 1.0)
+
+
+def chunked_xent(p_head: Dict, p_embed: Dict, h: jnp.ndarray,
+                 labels: jnp.ndarray, cfg: ModelConfig,
+                 weights: Optional[jnp.ndarray] = None,
+                 chunk: int = 512) -> jnp.ndarray:
+    """Cross-entropy without materializing the full (B, S, V) logits.
+
+    Scans over sequence chunks, computing logits -> logsumexp -> gold logit
+    per chunk; the (B, c, V) chunk is transient (and rematerialized in the
+    backward pass). Essential for the 150k-vocab archs at 4k x 256 batch —
+    full logits would be hundreds of GB per chip (EXPERIMENTS §Dry-run).
+    """
+    B, S, d = h.shape
+    c = min(chunk, S)
+    if S % c != 0:
+        return cross_entropy(lm_logits(p_head, p_embed, h, cfg), labels,
+                             weights)
+    n = S // c
+    hc = h.reshape(B, n, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape((B, n, c) + labels.shape[2:]).swapaxes(0, 1)
+    wc = None if weights is None else \
+        weights.reshape(B, n, c).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        nll_sum, w_sum = carry
+        if wc is None:
+            h_i, l_i = xs
+            w_i = jnp.ones(l_i.shape[:2], jnp.float32)
+        else:
+            h_i, l_i, w_i = xs
+        logits = lm_logits(p_head, p_embed, h_i, cfg)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l_i[..., None], axis=-1)[..., 0]
+        nll = lse - gold
+        if nll.ndim > w_i.ndim:  # multi-codebook: mean over codebooks
+            nll = nll.mean(-1)
+        return (nll_sum + (nll * w_i).sum(), w_sum + w_i.sum()), None
+
+    xs = (hc, lc) if wc is None else (hc, lc, wc)
+    # Recompute the chunk logits in the backward pass — otherwise the scan
+    # saves every chunk's (B, c, V) logits and the chunking buys nothing.
+    body = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.nothing_saveable)
+    (nll_sum, w_sum), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), xs)
+    return nll_sum / jnp.maximum(w_sum, 1.0)

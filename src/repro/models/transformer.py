@@ -1,0 +1,359 @@
+"""The composable model: embeds -> scanned block stack -> norm -> logits.
+
+Covers every assigned arch through ``ModelConfig``:
+- dense GQA decoders (qwen2.5/starcoder2/yi/qwen1.5, llava & musicgen backbones)
+- MoE (dbrx, arctic incl. dense-residual)
+- SSM (mamba2: pure SSD stack, attn-free)
+- hybrid (recurrentgemma: rglru/rglru/local pattern)
+
+Uniform stacks are `lax.scan`ned over layers with the remat policy from the
+config — the scan is what realizes the paper's "load W_S once" property on
+TPU: the shared dictionaries are loop invariants hoisted out of the layer
+loop, while per-layer sparse W_D factors stream through it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.factorized import DictionaryBank, FactorizationConfig
+from repro.core import sparsity
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssd as S
+from repro.models.common import ModelConfig
+
+__all__ = ["Model", "factorization_regularizer"]
+
+
+def factorization_regularizer(params: Dict, fcfg: FactorizationConfig) -> jnp.ndarray:
+    """Sum of out-of-support L1 over every W_D leaf (any stacking)."""
+    total = jnp.float32(0.0)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        if names and names[-1] == "wd":
+            r, d_out = leaf.shape[-2], leaf.shape[-1]
+            nnz = fcfg.nnz_for(r)
+            flat = leaf.reshape(-1, r, d_out)
+            total = total + jax.vmap(
+                lambda w: sparsity.out_of_support_l1(w, nnz))(flat).sum()
+    return total
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+
+    def _init_block(self, key: jax.Array, kind: str,
+                    bank: Optional[DictionaryBank]) -> Dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        p: Dict[str, Any] = {"norm1": L.init_norm(cfg)}
+        if kind in ("attn", "local"):
+            p["attn"] = L.init_attention(ks[0], cfg, bank)
+            p["norm2"] = L.init_norm(cfg)
+            if cfg.moe is not None:
+                p["moe"] = M.init_moe(ks[1], cfg, bank)
+                if cfg.moe.dense_residual:
+                    p["dense_ffn"] = L.init_ffn(ks[2], cfg, bank,
+                                                d_ff=cfg.moe.d_ff_dense,
+                                                prefix="densefn")
+            else:
+                p["ffn"] = L.init_ffn(ks[1], cfg, bank)
+        elif kind == "ssd":
+            p["ssd"] = S.init_ssd(ks[0], cfg, bank)
+        elif kind == "rglru":
+            p["rglru"] = R.init_rglru(ks[0], cfg, bank)
+            p["norm2"] = L.init_norm(cfg)
+            p["ffn"] = L.init_ffn(ks[1], cfg, bank)
+        else:
+            raise ValueError(kind)
+        return p
+
+    def init(self, key: jax.Array) -> Dict:
+        cfg = self.cfg
+        bank = DictionaryBank(cfg.factorization, cfg.params_dtype) \
+            if cfg.factorization.enabled else None
+        k_emb, k_head, k_layers = jax.random.split(key, 3)
+        params: Dict[str, Any] = {"embed": L.init_embedding(k_emb, cfg)}
+        lkeys = jax.random.split(k_layers, cfg.n_layers)
+        if cfg.uniform_layers:
+            kind = cfg.block_kind(0)
+            blocks = [self._init_block(lkeys[i], kind, bank)
+                      for i in range(cfg.n_layers)]
+            params["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+        else:
+            params["layers"] = {
+                f"layer_{i:02d}": self._init_block(lkeys[i], cfg.block_kind(i),
+                                                   bank)
+                for i in range(cfg.n_layers)
+            }
+        params["final_norm"] = L.init_norm(cfg)
+        params["lm_head"] = L.init_lm_head(k_head, cfg)
+        if bank is not None:
+            params["dicts"] = bank.dicts
+        return params
+
+    def param_shapes(self, seed: int = 0):
+        return jax.eval_shape(lambda k: self.init(k), jax.random.key(seed))
+
+    # ------------------------------------------------------------------
+    # one block
+    # ------------------------------------------------------------------
+
+    def _block(self, lp: Dict, x: jnp.ndarray, kind: str, *, dicts, positions,
+               seg_ids, cache_l, cache_index, mesh, sparse_train,
+               layer_idx=None):
+        cfg = self.cfg
+        aux = jnp.float32(0.0)
+        new_cache = None
+        if kind in ("attn", "local"):
+            window = cfg.local_window if kind == "local" else cfg.sliding_window
+            h = L.apply_norm(lp["norm1"], x)
+            a_out, new_cache = L.attention_block(
+                lp["attn"], h, cfg=cfg, dicts=dicts, positions=positions,
+                seg_ids=seg_ids, window=window, cache=cache_l,
+                cache_index=cache_index, layer_idx=layer_idx,
+                sparse_train=sparse_train, mesh=mesh)
+            x = x + a_out
+            h2 = L.apply_norm(lp["norm2"], x)
+            if cfg.moe is not None:
+                mo, aux = M.moe_ffn(lp["moe"], h2, cfg=cfg, dicts=dicts,
+                                    mesh=mesh, sparse_train=sparse_train)
+                x = x + mo
+                if cfg.moe.dense_residual:
+                    x = x + L.ffn_block(lp["dense_ffn"], h2, cfg=cfg,
+                                        dicts=dicts, sparse_train=sparse_train,
+                                        prefix="densefn", mesh=mesh)
+            else:
+                x = x + L.ffn_block(lp["ffn"], h2, cfg=cfg, dicts=dicts,
+                                    sparse_train=sparse_train, mesh=mesh)
+        elif kind == "ssd":
+            h = L.apply_norm(lp["norm1"], x)
+            out, new_cache = S.ssd_block(
+                lp["ssd"], h, cfg=cfg, dicts=dicts, cache=cache_l,
+                cache_index=cache_index, layer_idx=layer_idx,
+                sparse_train=sparse_train)
+            x = x + out
+        elif kind == "rglru":
+            h = L.apply_norm(lp["norm1"], x)
+            out, new_cache = R.rglru_block(lp["rglru"], h, cfg=cfg, dicts=dicts,
+                                           cache=cache_l,
+                                           sparse_train=sparse_train)
+            x = x + out
+            h2 = L.apply_norm(lp["norm2"], x)
+            x = x + L.ffn_block(lp["ffn"], h2, cfg=cfg, dicts=dicts,
+                                sparse_train=sparse_train, mesh=mesh)
+        return x, new_cache, aux
+
+    # ------------------------------------------------------------------
+    # forward
+    # ------------------------------------------------------------------
+
+    def _embed_in(self, params, batch, positions):
+        cfg = self.cfg
+        if cfg.external_embeddings:
+            return batch["embeds"].astype(cfg.compute_dtype)
+        return L.embed_tokens(params["embed"], batch["inputs"], cfg, positions)
+
+    def _stack_forward(self, params, x, *, dicts, positions, seg_ids, caches,
+                       cache_index, mesh, sparse_train, unroll=False):
+        """Run the block stack; returns (x, new_caches, aux)."""
+        cfg = self.cfg
+        if cfg.uniform_layers and unroll:
+            # Unrolled layer loop (decode): tiny graphs; static layer indices
+            # keep every cache update a local in-place DUS — the scanned
+            # carry otherwise copies the whole stacked cache each layer
+            # (§Perf cell C).
+            kind = cfg.block_kind(0)
+            aux = jnp.float32(0.0)
+            cur_caches = caches
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                x, cur_caches, aux_l = self._block(
+                    lp, x, kind, dicts=dicts, positions=positions,
+                    seg_ids=seg_ids, cache_l=cur_caches,
+                    cache_index=cache_index, mesh=mesh,
+                    sparse_train=sparse_train, layer_idx=i)
+                aux = aux + aux_l
+            return x, cur_caches, aux
+        if cfg.uniform_layers:
+            kind = cfg.block_kind(0)
+            idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+
+            # Caches ride the scan CARRY (in-place dynamic-update-slice per
+            # layer), never the ys — ys-stacking would copy the whole KV
+            # cache every layer (EXPERIMENTS §Dry-run).
+            def body(carry, xs):
+                lp, li = xs
+                if caches is None:
+                    xc, aux = carry
+                    cache_arg = None
+                else:
+                    xc, aux, cache_arg = carry
+                xc, new_cache, aux_l = self._block(
+                    lp, xc, kind, dicts=dicts, positions=positions,
+                    seg_ids=seg_ids, cache_l=cache_arg,
+                    cache_index=cache_index, mesh=mesh,
+                    sparse_train=sparse_train, layer_idx=li)
+                if caches is None:
+                    return (xc, aux + aux_l), None
+                return (xc, aux + aux_l, new_cache), None
+
+            if cfg.remat != "none":
+                policy = getattr(jax.checkpoint_policies, cfg.remat)
+                body = jax.checkpoint(body, policy=policy)
+            if caches is None:
+                (x, aux), _ = jax.lax.scan(
+                    body, (x, jnp.float32(0.0)), (params["layers"], idxs))
+                return x, None, aux
+            (x, aux, new_caches), _ = jax.lax.scan(
+                body, (x, jnp.float32(0.0), caches), (params["layers"], idxs))
+            return x, new_caches, aux
+
+        aux = jnp.float32(0.0)
+        new_caches = {} if caches is not None else None
+        for i in range(cfg.n_layers):
+            name = f"layer_{i:02d}"
+            cache_l = caches[name] if caches is not None else None
+            blk = functools.partial(
+                self._block, kind=cfg.block_kind(i), dicts=dicts,
+                positions=positions, seg_ids=seg_ids, cache_l=cache_l,
+                cache_index=cache_index, mesh=mesh, sparse_train=sparse_train)
+            if cfg.remat != "none":
+                policy = getattr(jax.checkpoint_policies, cfg.remat)
+                blk = jax.checkpoint(blk, policy=policy, static_argnums=())
+            x, new_cache, aux_l = blk(params["layers"][name], x)
+            aux = aux + aux_l
+            if caches is not None:
+                new_caches[name] = new_cache
+        return x, new_caches, aux
+
+    def hidden(self, params: Dict, batch: Dict, *, mesh=None,
+               sparse_train: bool = False, caches=None, cache_index=None
+               ) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
+        """Final-norm hidden states. Returns (h, new_caches, aux_loss)."""
+        cfg = self.cfg
+        ref = batch["embeds"] if cfg.external_embeddings else batch["inputs"]
+        B, Ss = ref.shape[0], ref.shape[1]
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(Ss, dtype=jnp.int32), (B, Ss))
+        seg_ids = batch.get("seg_ids")
+        dicts = params.get("dicts")
+        x = self._embed_in(params, batch, positions)
+        x = L.constrain_batch(x, mesh)
+        x, new_caches, aux = self._stack_forward(
+            params, x, dicts=dicts, positions=positions, seg_ids=seg_ids,
+            caches=caches, cache_index=cache_index, mesh=mesh,
+            sparse_train=sparse_train)
+        x = L.apply_norm(params["final_norm"], x)
+        return x, new_caches, aux
+
+    def apply(self, params: Dict, batch: Dict, *, mesh=None,
+              sparse_train: bool = False, caches=None, cache_index=None
+              ) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
+        """Full-sequence forward. Returns (logits, new_caches, aux_loss).
+
+        Materializes all-position logits — fine for small vocab / short
+        sequences; the train loss uses chunked_xent instead."""
+        x, new_caches, aux = self.hidden(params, batch, mesh=mesh,
+                                         sparse_train=sparse_train,
+                                         caches=caches,
+                                         cache_index=cache_index)
+        logits = L.lm_logits(params["lm_head"], params["embed"], x, self.cfg)
+        return logits, new_caches, aux
+
+    def loss(self, params: Dict, batch: Dict, *, mesh=None,
+             sparse_train: bool = False) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        h, _, aux = self.hidden(params, batch, mesh=mesh,
+                                sparse_train=sparse_train)
+        weights = batch.get("weights")
+        xe = L.chunked_xent(params["lm_head"], params["embed"], h,
+                            batch["labels"], cfg, weights)
+        total = xe + 0.01 * aux
+        metrics = {"xent": xe, "aux": aux}
+        if sparse_train and cfg.factorization.enabled:
+            reg = factorization_regularizer(params, cfg.factorization)
+            total = total + cfg.factorization.reg_coeff * reg
+            metrics["sparsity_reg"] = reg
+        metrics["loss"] = total
+        return total, metrics
+
+    # ------------------------------------------------------------------
+    # caches / decode
+    # ------------------------------------------------------------------
+
+    def _init_block_cache(self, kind: str, batch: int, max_len: int) -> Dict:
+        cfg = self.cfg
+        if kind in ("attn", "local"):
+            window = cfg.local_window if kind == "local" else cfg.sliding_window
+            ring = min(window, max_len) if window is not None else max_len
+            shape = (batch, ring, cfg.kv_heads, cfg.head_dim)
+            if cfg.kv_quant:
+                return {"k": jnp.zeros(shape, jnp.int8),
+                        "v": jnp.zeros(shape, jnp.int8),
+                        "k_scale": jnp.zeros(shape[:-1], jnp.float32),
+                        "v_scale": jnp.zeros(shape[:-1], jnp.float32)}
+            return {"k": jnp.zeros(shape, cfg.compute_dtype),
+                    "v": jnp.zeros(shape, cfg.compute_dtype)}
+        if kind == "ssd":
+            return S.init_ssd_cache(cfg, batch)
+        if kind == "rglru":
+            return R.init_rglru_cache(cfg, batch)
+        raise ValueError(kind)
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        if cfg.uniform_layers:
+            one = self._init_block_cache(cfg.block_kind(0), batch, max_len)
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
+        return {f"layer_{i:02d}": self._init_block_cache(cfg.block_kind(i),
+                                                         batch, max_len)
+                for i in range(cfg.n_layers)}
+
+    def decode_step(self, params: Dict, batch: Dict, caches,
+                    cache_index: jnp.ndarray, *, mesh=None
+                    ) -> Tuple[jnp.ndarray, Any]:
+        """One-token step. batch: {"inputs": (B,1)} or {"embeds": (B,1,d)};
+        cache_index: scalar count of tokens already in the cache."""
+        cfg = self.cfg
+        ref = batch["embeds"] if cfg.external_embeddings else batch["inputs"]
+        B = ref.shape[0]
+        positions = jnp.broadcast_to(cache_index.astype(jnp.int32), (B, 1))
+        dicts = params.get("dicts")
+        x = self._embed_in(params, batch, positions)
+        x, new_caches, _ = self._stack_forward(
+            params, x, dicts=dicts, positions=positions, seg_ids=None,
+            caches=caches, cache_index=cache_index, mesh=mesh,
+            sparse_train=False, unroll=cfg.unroll_decode)
+        x = L.apply_norm(params["final_norm"], x)
+        logits = L.lm_logits(params["lm_head"], params["embed"], x, cfg)
+        return logits, new_caches
+
+    def prefill(self, params: Dict, batch: Dict, *, mesh=None,
+                max_len: int = 0) -> Tuple[jnp.ndarray, Any]:
+        """Forward that also fills caches; returns (logits, caches).
+        ``max_len`` sizes the cache (>= prefill length + decode budget)."""
+        cfg = self.cfg
+        ref = batch["embeds"] if cfg.external_embeddings else batch["inputs"]
+        B, Ss = ref.shape[0], ref.shape[1]
+        caches = self.init_cache(B, max(max_len, Ss))
+        h, new_caches, _ = self.hidden(params, batch, mesh=mesh,
+                                       caches=caches,
+                                       cache_index=jnp.int32(0))
+        # Serving prefill only needs the last position's logits — computing
+        # all-position logits at 32k x 150k-vocab would be hundreds of GB.
+        logits = L.lm_logits(params["lm_head"], params["embed"], h[:, -1:],
+                             cfg)
+        return logits, new_caches

@@ -1,0 +1,2 @@
+from repro.optim.adamw import OptConfig, apply_updates, init_opt_state, lr_at  # noqa: F401
+from repro.optim.grad_comp import compress_pod_allreduce, init_ef_state  # noqa: F401

@@ -1,0 +1,161 @@
+"""Optimizers from scratch (no optax in this environment): AdamW and
+Adafactor, with schedules, global-norm clipping, reduced-precision moment
+storage, and an optional post-update projection hook (used to enforce the
+paper's fixed-NZ/column sparsity on W_D under distributed training, where the
+in-forward STE cannot see the full rank axis — see models/moe.py).
+
+Memory posture at scale: params are fp32 masters (compute casts to bf16);
+``state_dtype="bfloat16"`` halves moment memory (needed to fit the biggest
+assigned archs on a single pod — see EXPERIMENTS §Dry-run fit notes);
+Adafactor's factored second moment is the fallback that always fits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "init_opt_state", "apply_updates", "lr_at"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"  # cosine | constant | linear
+    # Adafactor extras
+    factored_min_dim: int = 128
+    # Post-update projection (e.g. top-k sparsity on W_D): name of a
+    # registered hook; resolved by the train loop.
+    project: bool = False
+
+
+def lr_at(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(cfg.warmup_steps, 1))
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        decay = jnp.maximum(
+            0.0, 1.0 - s / max(cfg.total_steps, 1))
+    else:  # cosine
+        frac = jnp.clip(s / max(cfg.total_steps, 1), 0.0, 1.0)
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * decay
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)) + 1e-20)
+
+
+def _factored(shape, min_dim) -> bool:
+    return len(shape) >= 2 and shape[-1] >= min_dim and shape[-2] >= min_dim
+
+
+def init_opt_state(params: Any, cfg: OptConfig) -> Dict:
+    dt = jnp.dtype(cfg.state_dtype)
+    if cfg.name == "adamw":
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+    if cfg.name == "adafactor":
+        def vstate(p):
+            if _factored(p.shape, cfg.factored_min_dim):
+                return {"vr": jnp.zeros(p.shape[:-1], dt),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], dt)}
+            return {"v": jnp.zeros(p.shape, dt)}
+        return {"v": jax.tree.map(vstate, params,
+                                  is_leaf=lambda x: hasattr(x, "shape"))}
+    raise ValueError(cfg.name)
+
+
+def _adamw_update(p, g, m, v, lr, cfg, step):
+    gf = g.astype(jnp.float32)
+    mf = m.astype(jnp.float32) * cfg.b1 + gf * (1 - cfg.b1)
+    vf = v.astype(jnp.float32) * cfg.b2 + jnp.square(gf) * (1 - cfg.b2)
+    t = step.astype(jnp.float32) + 1.0
+    mhat = mf / (1 - cfg.b1 ** t)
+    vhat = vf / (1 - cfg.b2 ** t)
+    upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+    if cfg.weight_decay:
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+    new_p = p.astype(jnp.float32) - lr * upd
+    dt = jnp.dtype(cfg.state_dtype)
+    return new_p.astype(p.dtype), mf.astype(dt), vf.astype(dt)
+
+
+def _adafactor_update(p, g, vs, lr, cfg, step):
+    gf = g.astype(jnp.float32)
+    t = step.astype(jnp.float32) + 1.0
+    decay = 1.0 - t ** -0.8
+    g2 = jnp.square(gf) + 1e-30
+    dt = jnp.dtype(cfg.state_dtype)
+    if "vr" in vs:
+        vr = vs["vr"].astype(jnp.float32) * decay + g2.mean(-1) * (1 - decay)
+        vc = vs["vc"].astype(jnp.float32) * decay + g2.mean(-2) * (1 - decay)
+        denom = (vr / jnp.maximum(vr.mean(-1, keepdims=True), 1e-30))[..., None] \
+            * vc[..., None, :]
+        upd = gf * jax.lax.rsqrt(denom + 1e-30)
+        new_vs = {"vr": vr.astype(dt), "vc": vc.astype(dt)}
+    else:
+        v = vs["v"].astype(jnp.float32) * decay + g2 * (1 - decay)
+        upd = gf * jax.lax.rsqrt(v + 1e-30)
+        new_vs = {"v": v.astype(dt)}
+    # Update clipping (Adafactor d=1.0).
+    rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+    upd = upd / jnp.maximum(1.0, rms)
+    if cfg.weight_decay:
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+    new_p = p.astype(jnp.float32) - lr * upd
+    return new_p.astype(p.dtype), new_vs
+
+
+def apply_updates(params: Any, grads: Any, state: Dict, step: jnp.ndarray,
+                  cfg: OptConfig,
+                  project_fn: Optional[Callable[[Any], Any]] = None
+                  ) -> Tuple[Any, Dict, Dict]:
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else 1.0
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    lr = lr_at(cfg, step)
+
+    if cfg.name == "adamw":
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_flatten(grads)[0]
+        flat_m = jax.tree_util.tree_flatten(state["m"])[0]
+        flat_v = jax.tree_util.tree_flatten(state["v"])[0]
+        out = [_adamw_update(p, g, m, v, lr, cfg, step)
+               for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        new_state = {
+            "m": jax.tree_util.tree_unflatten(tdef, [o[1] for o in out]),
+            "v": jax.tree_util.tree_unflatten(tdef, [o[2] for o in out]),
+        }
+    else:  # adafactor
+        is_vs = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_flatten(grads)[0]
+        flat_vs = jax.tree_util.tree_flatten(state["v"], is_leaf=is_vs)[0]
+        out = [_adafactor_update(p, g, vs, lr, cfg, step)
+               for p, g, vs in zip(flat_p, flat_g, flat_vs)]
+        new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        vs_def = jax.tree_util.tree_structure(state["v"], is_leaf=is_vs)
+        new_state = {"v": jax.tree_util.tree_unflatten(
+            vs_def, [o[1] for o in out])}
+
+    if project_fn is not None:
+        new_params = project_fn(new_params)
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, stats

@@ -1,0 +1,2 @@
+from repro.serve.batcher import DynamicBatcher, Request  # noqa: F401
+from repro.serve.engine import Engine  # noqa: F401

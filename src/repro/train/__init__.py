@@ -1,0 +1,1 @@
+from repro.train.loop import TrainLoopConfig, make_project_fn, train  # noqa: F401

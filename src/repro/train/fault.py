@@ -1,0 +1,31 @@
+"""Fault-tolerance & straggler-mitigation notes + helpers (DESIGN §5).
+
+Failure model at 1000+ nodes (synchronous SPMD):
+
+- **Hard failures** (host/chip death): the collective times out; the job
+  coordinator restarts all processes; every process re-enters
+  ``train.loop.train`` which restores the last *complete* checkpoint
+  (atomic manifest => no torn reads) and continues. Supported here by
+  mesh-independent checkpoints (checkpoint/checkpoint.py) — a job that lost
+  a pod restarts on ``make_production_mesh(multi_pod=False)`` and reloads
+  the same arrays with the smaller mesh's shardings (elastic re-mesh).
+
+- **Soft failures** (NaN/Inf from flaky HBM, loss spikes from bad batches):
+  detected per step by the loop's nan/spike guard; the step is discarded
+  (optimizer state untouched, batch skipped). ``max_consecutive_bad``
+  spikes escalate to checkpoint restore.
+
+- **Stragglers**: with synchronous SPMD the step time is the max over
+  hosts; per-step wall-clock is monitored (``step_timeout_s``) and a
+  persistently slow step escalates like a soft failure (in production the
+  coordinator would also evict the slow host; that decision is outside the
+  SPMD program). Asynchronous/unsynchronized schemes were deliberately not
+  used: the paper's technique does not interact with gradient staleness,
+  and sync-SPMD matches the JAX/XLA execution model.
+
+- **Checkpoint cadence**: async host-side snapshot (train loop never blocks
+  on disk) + keep-last-k + atomic rename. At scale, each host writes its
+  addressable shards only; the manifest format already records per-leaf
+  files to make that an additive change.
+"""
+from repro.checkpoint.checkpoint import latest_step, restore_checkpoint  # noqa: F401

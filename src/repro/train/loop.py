@@ -1,0 +1,163 @@
+"""Training loop with fault tolerance: checkpoint/restart, NaN/spike guard,
+step timeout (straggler surrogate), and elastic resume.
+
+At 1000+-node scale the failure model is: a host dies -> the SPMD step
+timeouts / the coordinator restarts the job -> every host reloads the last
+complete checkpoint (possibly on a smaller mesh — checkpoint/checkpoint.py is
+mesh-independent) and continues. This loop implements the per-process side of
+that contract; the single-host CI exercises it by injecting faults
+(tests/test_train_loop.py).
+
+Also hosts the paper-specific training schedule: dense warmup -> factorized
+sparse training (STE + regularizer) -> periodic hard projection of W_D to the
+fixed NZ/column budget (`project_every`), so distributed runs (where the
+in-forward STE cannot see the sharded rank axis) still converge to exactly
+compressible W_D.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import (async_save, latest_step,
+                                         restore_checkpoint, wait_pending)
+from repro.core import sparsity
+from repro.core.factorized import FactorizationConfig
+from repro.models.transformer import Model
+from repro.optim import OptConfig, init_opt_state
+from repro.launch.steps import make_train_step
+
+__all__ = ["TrainLoopConfig", "train", "make_project_fn"]
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 200
+    ckpt_dir: str = "checkpoints"
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+    # Fault tolerance
+    nan_guard: bool = True
+    max_consecutive_bad: int = 3
+    step_timeout_s: float = 0.0  # 0 = disabled; >0: treat slow steps as faults
+    # Paper schedule
+    sparse_from_step: int = 0  # STE projection active from this step
+    project_every: int = 25  # hard top-k projection of W_D (0 = off)
+
+
+def make_project_fn(fcfg: FactorizationConfig) -> Callable[[Any], Any]:
+    """Hard top-k-per-column projection over every W_D leaf (any stacking)."""
+
+    def project(params):
+        def visit(path, leaf):
+            names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+            if names and names[-1] == "wd":
+                r, d_out = leaf.shape[-2], leaf.shape[-1]
+                nnz = fcfg.nnz_for(r)
+                flat = leaf.reshape(-1, r, d_out)
+                proj = jax.vmap(
+                    lambda w: sparsity.project_topk_columns(w, nnz))(flat)
+                return proj.reshape(leaf.shape)
+            return leaf
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        return jax.tree_util.tree_unflatten(
+            treedef, [visit(p, l) for p, l in flat])
+
+    return jax.jit(project)
+
+
+def train(model: Model, data: Iterator[Dict[str, np.ndarray]],
+          opt_cfg: OptConfig, loop_cfg: TrainLoopConfig, *,
+          mesh=None, seed: int = 0,
+          hooks: Optional[Dict[str, Callable]] = None) -> Dict[str, Any]:
+    """Run (or resume) training. Returns final state + history."""
+    hooks = hooks or {}
+    cfg = model.cfg
+    fcfg = cfg.factorization
+    project_fn = make_project_fn(fcfg) if (
+        fcfg.enabled and loop_cfg.project_every) else None
+
+    # ---- init or restore
+    start = latest_step(loop_cfg.ckpt_dir)
+    params = model.init(jax.random.key(seed))
+    state = {"params": params,
+             "opt": init_opt_state(params, opt_cfg),
+             "step": jnp.zeros((), jnp.int32)}
+    if start is not None:
+        state, start_step = restore_checkpoint(loop_cfg.ckpt_dir, state)
+        print(f"[train] resumed from step {start_step}")
+    step0 = int(state["step"])
+
+    dense_step = jax.jit(make_train_step(model, opt_cfg, mesh=mesh,
+                                         sparse_train=False),
+                         donate_argnums=(0,))
+    sparse_step = jax.jit(make_train_step(model, opt_cfg, mesh=mesh,
+                                          sparse_train=True),
+                          donate_argnums=(0,))
+
+    history = []
+    bad_streak = 0
+    prev_loss = None
+    for step in range(step0, loop_cfg.total_steps):
+        batch = next(data)
+        if "inject_fault" in hooks:
+            batch = hooks["inject_fault"](step, batch)
+        sparse = fcfg.enabled and step >= loop_cfg.sparse_from_step
+        fn = sparse_step if sparse else dense_step
+        t0 = time.time()
+        new_state, metrics = fn(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+
+        # ---- fault handling: NaN / spike / straggler-timeout
+        bad = not np.isfinite(loss)
+        if prev_loss is not None and np.isfinite(loss):
+            bad |= loss > max(3.0 * prev_loss, prev_loss + 5.0)
+        if loop_cfg.step_timeout_s and dt > loop_cfg.step_timeout_s:
+            bad = True
+        if loop_cfg.nan_guard and bad:
+            bad_streak += 1
+            print(f"[train] step {step}: bad step "
+                  f"(loss={loss}, {dt:.1f}s) — skipped "
+                  f"({bad_streak}/{loop_cfg.max_consecutive_bad})")
+            if bad_streak >= loop_cfg.max_consecutive_bad:
+                ck = latest_step(loop_cfg.ckpt_dir)
+                if ck is not None:
+                    state, _ = restore_checkpoint(loop_cfg.ckpt_dir, state)
+                    print(f"[train] restarted from checkpoint step {ck}")
+                bad_streak = 0
+            # new_state was donated; rebuild a usable state from checkpoint
+            # or keep going with new_state when no checkpoint exists.
+            if latest_step(loop_cfg.ckpt_dir) is None:
+                state = new_state
+            continue
+        bad_streak = 0
+        prev_loss = loss if prev_loss is None else 0.9 * prev_loss + 0.1 * loss
+        state = new_state
+
+        # ---- paper schedule: periodic hard projection of W_D
+        if project_fn is not None and sparse and \
+                (step + 1) % loop_cfg.project_every == 0:
+            state = dict(state)
+            state["params"] = project_fn(state["params"])
+
+        if step % loop_cfg.log_every == 0 or step == loop_cfg.total_steps - 1:
+            rec = {"step": step, "loss": loss, "dt": dt,
+                   "grad_norm": float(metrics.get("grad_norm", 0.0)),
+                   "sparse": sparse}
+            history.append(rec)
+            print(f"[train] step {step:5d} loss {loss:8.4f} "
+                  f"gnorm {rec['grad_norm']:8.3f} {dt*1e3:7.1f}ms"
+                  f"{' [sparse]' if sparse else ''}")
+        if (step + 1) % loop_cfg.ckpt_every == 0:
+            async_save(loop_cfg.ckpt_dir, step + 1, state, keep=loop_cfg.keep)
+
+    wait_pending()
+    return {"state": state, "history": history}

@@ -1,0 +1,9 @@
+"""Test config. NOTE: no XLA_FLAGS here — tests must see 1 real device;
+sharding tests spawn subprocesses with their own flags."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

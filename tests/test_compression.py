@@ -1,0 +1,95 @@
+"""Compression pipeline: unit + hypothesis property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as comp
+
+
+def test_nonuniform_roundtrip_accuracy(rng):
+    w = rng.normal(size=(256, 128)).astype(np.float32)
+    q = comp.quantize_nonuniform(w, bits=4)
+    deq = np.asarray(comp.dequantize_nonuniform(jnp.asarray(q.codes),
+                                                jnp.asarray(q.lut)))
+    # 4b k-means on a gaussian: expect small relative error on average.
+    rel = np.abs(deq - w).mean() / np.abs(w).mean()
+    assert rel < 0.15
+    assert q.codes.max() < 16
+    assert np.all(np.diff(q.lut) >= 0)
+
+
+def test_uniform_roundtrip_exact_levels():
+    v = np.linspace(-3, 5, 64).astype(np.float32)
+    q = comp.quantize_uniform(v, bits=6)
+    deq = np.asarray(comp.dequantize_uniform(jnp.asarray(q.q), q.scale,
+                                             q.offset))
+    assert np.abs(deq - v).max() <= q.scale / 63 * 0.51
+
+
+@given(st.integers(1, 30), st.integers(2, 64), st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_delta_roundtrip(nnz, ncols, seed):
+    rng = np.random.default_rng(seed)
+    r = 128
+    idx = np.sort(
+        rng.choice(r, size=(min(nnz, r), ncols), replace=True), axis=0)
+    dec = comp.delta_decode(comp.delta_encode(idx))
+    np.testing.assert_array_equal(dec, idx)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_compress_wd_roundtrip_support(seed):
+    """Decompressed W_D has exactly the chosen support, values within one
+    quantization step."""
+    rng = np.random.default_rng(seed)
+    r, n, nnz = 64, 48, 6
+    wd = rng.normal(size=(r, n)).astype(np.float32)
+    cwd = comp.compress_wd(wd, nnz)
+    dense = np.asarray(comp.decompress_wd_dense(cwd))
+    assert (np.count_nonzero(dense, axis=0) <= nnz).all()
+    # Top-nnz entries survive within quantization error.
+    keep = np.sort(np.argsort(-np.abs(wd), axis=0)[:nnz], axis=0)
+    step = cwd.scale / 63 if cwd.scale else 0.0
+    for j in range(n):
+        for i in keep[:, j]:
+            assert abs(dense[i, j] - wd[i, j]) <= step * 0.51 + 1e-6
+
+
+def test_reorder_reduces_delta_bits(rng):
+    r, n, nnz = 256, 512, 8
+    # Columns repeatedly co-select rows from scattered but DISJOINT cliques
+    # -> reordering should pack each clique contiguously and shrink deltas.
+    perm = rng.permutation(r)
+    cliques = [perm[i * nnz:(i + 1) * nnz] for i in range(8)]
+    idx = np.stack([np.sort(cliques[i % 8]) for i in range(n)], axis=1)
+    before = comp.delta_encode(idx)[1:].max()
+    order = comp.reorder_for_delta(idx, r)
+    assert sorted(order.tolist()) == list(range(r))  # a permutation
+    inv = np.empty(r, np.int64)
+    inv[order] = np.arange(r)
+    idx_new = np.sort(inv[idx], axis=0)
+    after = comp.delta_encode(idx_new)[1:].max()
+    assert after <= before
+    assert after <= 31  # fits the paper's 5b target on clique-structured data
+
+
+def test_compressed_bits_accounting():
+    cws = comp.CompressedWS(codes=np.zeros((128, 64), np.uint8),
+                            lut=np.zeros(16, np.float32), bits=4)
+    assert comp.ws_compressed_bits(cws) == 128 * 64 * 4 + 256
+    rng = np.random.default_rng(0)
+    wd = rng.normal(size=(64, 32)).astype(np.float32)
+    cwd = comp.compress_wd(wd, 6)
+    bits = comp.wd_compressed_bits(cwd)
+    assert bits == 32 * (6 + 5 * 5 + 6 * 6) + 32
+
+
+def test_packing_nibbles_roundtrip(rng):
+    from repro.core.factorized import pack_nibbles, unpack_nibbles
+    codes = rng.integers(0, 16, size=(64, 32)).astype(np.uint8)
+    packed = pack_nibbles(codes)
+    assert packed.shape == (32, 32)
+    out = np.asarray(unpack_nibbles(jnp.asarray(packed)))
+    np.testing.assert_array_equal(out, codes)

@@ -1,0 +1,110 @@
+"""Factorized linear: parameterization, STE sparsity, compressed runtime."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparsity
+from repro.core.factorized import (DictionaryBank, FactorizationConfig,
+                                   apply_compressed_linear, apply_linear,
+                                   compress_linear, init_linear, linear_macs,
+                                   pack_nibbles)
+from repro.core import compression as comp
+
+FCFG = FactorizationConfig(enabled=True, min_dim=32, rank=64, nnz=8)
+
+
+def _mk_linear(key, d_in=128, d_out=96, fcfg=FCFG):
+    bank = DictionaryBank(fcfg)
+    p = init_linear(key, d_in, d_out, fcfg, bank, "fam")
+    return p, bank
+
+
+def test_factorized_params_created():
+    p, bank = _mk_linear(jax.random.key(0))
+    assert "wd" in p and "w" not in p
+    assert bank.dicts["fam"].shape == (128, 64)
+    assert p["wd"].shape == (64, 96)
+
+
+def test_shared_dictionary_across_layers():
+    fcfg = FCFG
+    bank = DictionaryBank(fcfg)
+    k = jax.random.key(0)
+    init_linear(k, 128, 96, fcfg, bank, "fam")
+    ws_before = bank.dicts["fam"]
+    init_linear(jax.random.key(1), 128, 96, fcfg, bank, "fam")
+    assert bank.dicts["fam"] is ws_before  # second layer reuses it
+    with pytest.raises(ValueError):
+        bank.ensure(k, "fam", 256)  # incompatible shape
+
+
+def test_apply_matches_explicit_product():
+    p, bank = _mk_linear(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (4, 128))
+    y = apply_linear(p, x, bank.dicts, "fam", FCFG)
+    expect = (x @ bank.dicts["fam"]) @ p["wd"]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect), rtol=1e-5)
+
+
+def test_ste_projection_forward_sparse_backward_dense():
+    wd = jax.random.normal(jax.random.key(0), (32, 16))
+    out = sparsity.ste_sparse(wd, 4)
+    assert int((np.asarray(out) != 0).sum(axis=0).max()) <= 4
+    g = jax.grad(lambda w: sparsity.ste_sparse(w, 4).sum())(wd)
+    np.testing.assert_allclose(np.asarray(g), np.ones_like(g))  # dense grads
+
+
+@given(st.integers(1, 16), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_projection_exact_nnz(nnz, seed):
+    wd = jax.random.normal(jax.random.key(seed), (32, 12))
+    out = np.asarray(sparsity.project_topk_columns(wd, nnz))
+    assert (np.count_nonzero(out, axis=0) == min(nnz, 32)).all()
+
+
+def test_regularizer_zero_iff_exactly_sparse():
+    wd = jax.random.normal(jax.random.key(0), (32, 8))
+    proj = sparsity.project_topk_columns(wd, 4)
+    assert float(sparsity.out_of_support_l1(proj, 4)) == 0.0
+    assert float(sparsity.out_of_support_l1(wd, 4)) > 0.0
+
+
+def test_mac_accounting():
+    fcfg = FactorizationConfig(enabled=True, min_dim=32, rank=64, nnz=8)
+    assert linear_macs(10, 128, 96, fcfg) == 10 * (128 * 64 + 8 * 96)
+    dense = FactorizationConfig(enabled=False)
+    assert linear_macs(10, 128, 96, dense) == 10 * 128 * 96
+
+
+def test_compressed_linear_close_to_dense():
+    """compress -> runtime decompress matmul stays close to the trained
+    (projected) factorized layer — the paper's 'minimal accuracy loss'."""
+    key = jax.random.key(0)
+    p, bank = _mk_linear(key)
+    # emulate end-of-training: project W_D to its support
+    p = {"wd": sparsity.project_topk_columns(p["wd"], FCFG.nnz)}
+    dicts_np = {"fam": np.asarray(bank.dicts["fam"])}
+    cp = compress_linear({"wd": np.asarray(p["wd"])}, dicts_np, "fam", FCFG)
+    order = cp.pop("_order")
+    ws_perm = dicts_np["fam"][:, order]
+    cws = comp.compress_ws(ws_perm)
+    cdicts = {"fam": {"codes_packed": jnp.asarray(pack_nibbles(cws.codes)),
+                      "lut": jnp.asarray(cws.lut)}}
+    cp = {k: jnp.asarray(v) for k, v in cp.items()}
+    x = jax.random.normal(jax.random.key(2), (16, 128))
+    y_ref = apply_linear(p, x, bank.dicts, "fam", FCFG)
+    y_cmp = apply_compressed_linear(cp, x.astype(jnp.bfloat16), cdicts, "fam")
+    ref = np.asarray(y_ref)
+    err = np.abs(np.asarray(y_cmp, np.float32) - ref).mean()
+    scale = np.abs(ref).mean()
+    assert err / scale < 0.25  # 4b Ws x 6b Wd: coarse but bounded
+
+
+def test_rank_uses_min_dim():
+    fcfg = FactorizationConfig(enabled=True)
+    assert fcfg.rank_for(4096, 1024) == fcfg.rank_for(1024, 4096)
+    assert fcfg.rank_for(1024, 4096) == 640

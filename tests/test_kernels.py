@@ -1,0 +1,127 @@
+"""Pallas kernels vs their pure-jnp oracles: shape/dtype sweeps in interpret
+mode (CPU executes the kernel bodies; on TPU set interpret=False)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as comp
+from repro.core.factorized import pack_nibbles
+from repro.kernels.dmm.ops import lut_matmul
+from repro.kernels.dmm.ref import dmm_reference
+from repro.kernels.smm.ops import compressed_matmul
+from repro.kernels.smm.ref import smm_reference
+from repro.kernels.afu.ops import fused_layernorm_residual, fused_softmax
+from repro.kernels.afu.ref import (exp_lut_table, lut_exp,
+                                   layernorm_residual_reference,
+                                   softmax_lut_reference)
+
+RNG = np.random.default_rng(0)
+
+
+def _mk_ws(K, N):
+    ws = RNG.normal(size=(K, N)).astype(np.float32) * 0.1
+    cws = comp.compress_ws(ws)
+    return jnp.asarray(pack_nibbles(cws.codes)), jnp.asarray(cws.lut)
+
+
+# ---- DMM sweeps -----------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N,bm,bn,bk", [
+    (32, 64, 48, 32, 32, 64),
+    (64, 128, 96, 32, 32, 32),
+    (100, 60, 36, 32, 32, 32),   # padding path
+    (16, 256, 128, 16, 128, 128),
+    (128, 128, 128, 64, 64, 64),
+])
+@pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+def test_dmm_matches_ref(M, K, N, bm, bn, bk, xdtype):
+    packed, lut = _mk_ws(K, N)
+    x = jnp.asarray(RNG.normal(size=(M, K))).astype(xdtype)
+    out = lut_matmul(x, packed, lut, bm=bm, bn=bn, bk=bk)
+    ref = dmm_reference(x, packed, lut)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-2 if xdtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-2)
+
+
+# ---- SMM sweeps -----------------------------------------------------------
+
+@pytest.mark.parametrize("M,r,N,nnz,bm,bn", [
+    (32, 64, 48, 8, 32, 48),
+    (64, 128, 100, 16, 32, 50),  # padding path
+    (16, 32, 32, 2, 16, 32),
+    (48, 96, 64, 24, 24, 32),
+])
+def test_smm_matches_ref(M, r, N, nnz, bm, bn):
+    wd = RNG.normal(size=(r, N)).astype(np.float32)
+    cwd = comp.compress_wd(wd, nnz)
+    first = jnp.asarray(comp.delta_decode(cwd.deltas)[0].astype(np.int32))
+    deltas = jnp.asarray(cwd.deltas[1:].astype(np.uint8))
+    vq = jnp.asarray(cwd.values_q)
+    y = jnp.asarray(RNG.normal(size=(M, r)).astype(np.float32))
+    out = compressed_matmul(y, first, deltas, vq, cwd.scale, cwd.offset,
+                            bm=bm, bn=bn)
+    ref = smm_reference(y, first, deltas, vq, jnp.float32(cwd.scale),
+                        jnp.float32(cwd.offset))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dmm_smm_chain_matches_factorized_product():
+    """The paper's sequential MM through both kernels vs the f32 product."""
+    M, K, r, N, nnz = 32, 64, 64, 48, 8
+    ws = RNG.normal(size=(K, r)).astype(np.float32) * 0.2
+    wd_dense = RNG.normal(size=(r, N)).astype(np.float32)
+    from repro.core.sparsity import project_topk_columns
+    wd_sparse = np.asarray(project_topk_columns(jnp.asarray(wd_dense), nnz))
+    x = RNG.normal(size=(M, K)).astype(np.float32)
+
+    cws = comp.compress_ws(ws)
+    cwd = comp.compress_wd(wd_sparse, nnz)
+    y1 = lut_matmul(jnp.asarray(x), jnp.asarray(pack_nibbles(cws.codes)),
+                    jnp.asarray(cws.lut), bm=32, bn=32, bk=32)
+    z = compressed_matmul(
+        y1.astype(jnp.float32),
+        jnp.asarray(comp.delta_decode(cwd.deltas)[0].astype(np.int32)),
+        jnp.asarray(cwd.deltas[1:].astype(np.uint8)),
+        jnp.asarray(cwd.values_q), cwd.scale, cwd.offset, bm=32, bn=48)
+    exact = (x @ ws) @ wd_sparse
+    rel = np.abs(np.asarray(z) - exact).mean() / (np.abs(exact).mean() + 1e-9)
+    assert rel < 0.25  # bounded by 4b/6b quantization noise
+
+
+# ---- AFU ------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,C", [(8, 16), (33, 50), (256, 128), (7, 999)])
+def test_afu_softmax_vs_ref_and_exact(R, C):
+    x = jnp.asarray(RNG.normal(size=(R, C)) * 4).astype(jnp.float32)
+    out = fused_softmax(x)
+    ref = softmax_lut_reference(np.asarray(x))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-6)
+    exact = jax.nn.softmax(x, axis=-1)
+    assert float(jnp.abs(out - exact).max()) < 5e-3  # 64-entry LUT bound
+    np.testing.assert_allclose(np.asarray(out.sum(-1)), 1.0, rtol=1e-5)
+
+
+@given(st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_lut_exp_monotone_bounded(seed):
+    x = jnp.linspace(-20.0, 0.0, 257)
+    y = lut_exp(x, exp_lut_table())
+    # 64-entry linear interp of exp on [-16,0]: max err ~ f''*h^2/8 ~ 8e-3
+    assert float(jnp.abs(y - jnp.exp(jnp.clip(x, -16, 0))).max()) < 1.1e-2
+    assert bool(jnp.all(jnp.diff(y) >= -1e-7))
+
+
+def test_afu_layernorm_residual():
+    x = jnp.asarray(RNG.normal(size=(40, 64)).astype(np.float32))
+    res = jnp.asarray(RNG.normal(size=(40, 64)).astype(np.float32))
+    scale = jnp.asarray(RNG.normal(size=(64,)).astype(np.float32))
+    bias = jnp.asarray(RNG.normal(size=(64,)).astype(np.float32))
+    out = fused_layernorm_residual(x, res, scale, bias)
+    ref = layernorm_residual_reference(x, res, scale, bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
+                               atol=1e-5)
