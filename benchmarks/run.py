@@ -2,7 +2,8 @@
 ``name,us_per_call,derived`` CSV (assignment format).
 
   PYTHONPATH=src python -m benchmarks.run [table ...]
-Tables: params ema macs utilization latency_energy kernels accuracy roofline
+Tables: params ema macs utilization latency_energy kernels decode accuracy
+roofline
 """
 import sys
 
@@ -11,8 +12,8 @@ from benchmarks import tables
 
 def main() -> None:
     names = sys.argv[1:] or ["params", "ema", "macs", "utilization",
-                             "latency_energy", "kernels", "accuracy",
-                             "roofline"]
+                             "latency_energy", "kernels", "decode",
+                             "accuracy", "roofline"]
     print("name,us_per_call,derived")
     for n in names:
         for name, us, derived in getattr(tables, f"bench_{n}")():

@@ -158,6 +158,117 @@ def bench_kernels() -> List[Row]:
     return rows
 
 
+# ---- decode: continuous batching vs seed lock-step (serving-side Fig 23.1.4)
+
+
+def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
+    """Tokens/s and per-step slot utilization for the slot-based continuous
+    decode engine vs the seed's lock-step decode (static batches, per-token
+    host sync, no mid-decode admissions). Slot utilization is the decode-side
+    counterpart of the paper's PE-utilization metric; BENCH_ tracking keeps
+    future PRs from regressing the continuous-batching win (target >=1.5x
+    tokens/s on a mixed-length CPU workload)."""
+    from repro.configs import get_config
+    from repro.core.packing import PackingPolicy, pack_requests
+    from repro.models.transformer import Model
+    from repro.serve import Engine, Request
+
+    cfg = get_config("qwen2.5-32b", "smoke")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    max_len, max_new = 32, 16
+    rng = np.random.default_rng(0)
+    spec = [(int(rng.integers(4, max_len - 3)),
+             int(rng.integers(2, max_new + 1))) for _ in range(n_requests)]
+    useful = sum(b for _, b in spec)  # budgets are pre-capped at max_new
+
+    def workload():
+        r2 = np.random.default_rng(1)
+        return [Request(rid=i, prompt=r2.integers(
+                    0, cfg.vocab_size, size=L).astype(np.int32),
+                    max_new_tokens=b)
+                for i, (L, b) in enumerate(spec)]
+
+    # ---- seed-style lock-step baseline: groups of num_slots requests,
+    # packed prefill for first tokens, left-aligned prefill for the cache,
+    # then max_new-1 decode steps in lock-step with per-token host sync.
+    pol = PackingPolicy(max_len=max_len, max_per_row=4)
+    prefill_j = jax.jit(lambda p, b: model.apply(p, b)[0])
+    decode_j = jax.jit(lambda p, b, c, i: model.decode_step(p, b, c, i))
+
+    def run_lockstep(reqs):
+        row_steps = 0
+        for g in range(0, len(reqs), num_slots):
+            batch = reqs[g:g + num_slots]
+            packed = pack_requests([r.prompt for r in batch], pol)
+            logits = prefill_j(params, {
+                "inputs": jnp.asarray(packed.tokens),
+                "positions": jnp.asarray(packed.positions),
+                "seg_ids": jnp.asarray(packed.segment_ids)})
+            first = [int(jnp.argmax(logits[r_, s_ + l_ - 1]))
+                     for (r_, s_, l_) in packed.request_slots]
+            B = len(batch)
+            maxp = max(len(r.prompt) for r in batch)
+            rows = np.zeros((B, maxp), np.int32)
+            seg = np.zeros((B, maxp), np.int32)
+            pos = np.zeros((B, maxp), np.int32)
+            for i, r in enumerate(batch):
+                L = len(r.prompt)
+                rows[i, :L] = r.prompt
+                seg[i, :L] = 1
+                pos[i, :L] = np.arange(L)
+            _, caches = model.prefill(
+                params, {"inputs": jnp.asarray(rows),
+                         "positions": jnp.asarray(pos),
+                         "seg_ids": jnp.asarray(seg)},
+                max_len=maxp + max_new + 1)
+            cur = jnp.asarray([[t] for t in first], jnp.int32)
+            idx = jnp.int32(maxp)
+            for i, r in enumerate(batch):
+                r.output.append(first[i])
+            for _ in range(max_new - 1):
+                logits, caches = decode_j(params, {"inputs": cur}, caches,
+                                          idx)
+                cur = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(
+                    jnp.int32)
+                idx = idx + 1
+                row_steps += B
+                for i, r in enumerate(batch):
+                    r.output.append(int(cur[i, 0]))  # per-token host sync
+        return row_steps
+
+    run_lockstep(workload())  # compile
+    t0 = time.perf_counter()
+    row_steps = run_lockstep(workload())
+    ls_s = time.perf_counter() - t0
+    # a lock-step row-step is useful while its request still wants tokens
+    ls_util = sum(b - 1 for _, b in spec) / max(row_steps, 1)
+
+    # ---- continuous engine: same workload, same slot count.
+    eng = Engine(model, params, max_len=max_len, max_new_tokens=max_new,
+                 num_slots=num_slots)
+    for r in workload():
+        eng.submit(r)
+    eng.run()  # compile
+    t0 = time.perf_counter()
+    for r in workload():
+        eng.submit(r)
+    eng.run()
+    ct_s = time.perf_counter() - t0
+    ct_util = eng.decode_stats["slot_utilization"]
+
+    speedup = (useful / ct_s) / (useful / ls_s)
+    return [
+        ("decode/lockstep", ls_s * 1e6,
+         f"tok/s={useful / ls_s:.0f} decode_util={ls_util:.2f}"),
+        ("decode/continuous", ct_s * 1e6,
+         f"tok/s={useful / ct_s:.0f} slot_util={ct_util:.2f} "
+         f"steps={eng.decode_stats['steps']}"),
+        ("decode/speedup", 0.0,
+         f"continuous_vs_lockstep={speedup:.2f}x (target >=1.5x)"),
+    ]
+
+
 # ---- E6: accuracy preserved (factorized vs dense, synthetic LM) -----------
 
 

@@ -10,4 +10,11 @@ from repro.core.factorized import (  # noqa: F401
     linear_macs,
     linear_param_bits,
 )
-from repro.core.packing import PackedBatch, PackingPolicy, pack_requests, segment_mask  # noqa: F401
+from repro.core.packing import (  # noqa: F401
+    PackedBatch,
+    PackingPolicy,
+    chunk_prompt,
+    pack_requests,
+    packing_utilization,
+    segment_mask,
+)

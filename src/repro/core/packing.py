@@ -21,6 +21,7 @@ __all__ = [
     "PackingPolicy",
     "PackedBatch",
     "pack_requests",
+    "chunk_prompt",
     "segment_mask",
     "packing_utilization",
 ]
@@ -114,6 +115,24 @@ def pack_requests(
         slots[i] = (rix, start, L)
     return PackedBatch(tokens=tokens, segment_ids=seg, positions=pos,
                        request_slots=slots)
+
+
+def chunk_prompt(prompt: np.ndarray, max_len: int) -> List[np.ndarray]:
+    """Split a prompt into consecutive chunks of at most ``max_len`` tokens.
+
+    The serving layer's analogue of the chip streaming an over-long input
+    through the datapath in datapath-width pieces: prompts longer than the
+    packing width are no longer rejected at submit — they are admitted as a
+    solo (unpacked) prefill whose width is ``len(chunks) * max_len``, which
+    keeps the set of prefill shapes (and therefore XLA compilations) small
+    and bounded. Concatenating the returned chunks reproduces ``prompt``.
+    """
+    if max_len <= 0:
+        raise ValueError(f"max_len must be positive, got {max_len}")
+    prompt = np.asarray(prompt)
+    if prompt.ndim != 1 or len(prompt) == 0:
+        raise ValueError("prompt must be a non-empty 1-D token array")
+    return [prompt[i:i + max_len] for i in range(0, len(prompt), max_len)]
 
 
 def segment_mask(

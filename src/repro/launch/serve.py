@@ -54,8 +54,10 @@ def main():
     util = np.mean([s["utilization"] for s in eng.stats])
     packs = sum(s["n_requests"] for s in eng.stats) / max(
         sum(s["rows"] for s in eng.stats), 1)
+    ds = eng.decode_stats
     print(f"served {len(done)} requests | {packs:.2f} requests/weight-sweep "
-          f"| slot utilization {util:.2f}")
+          f"| prefill fill {util:.2f} | decode slot utilization "
+          f"{ds['slot_utilization']:.2f} over {ds['steps']} steps")
 
 
 if __name__ == "__main__":

@@ -23,8 +23,8 @@ from repro.models.transformer import Model
 from repro.optim import OptConfig, apply_updates, init_opt_state
 
 __all__ = ["StepBundle", "make_train_step", "make_prefill_step",
-           "make_serve_step", "batch_shapes", "build_bundle",
-           "train_state_shapes"]
+           "make_serve_step", "make_slot_serve_step", "batch_shapes",
+           "build_bundle", "train_state_shapes"]
 
 
 @dataclasses.dataclass
@@ -115,6 +115,21 @@ def make_serve_step(model: Model, mesh=None) -> Callable:
         return logits[:, 0], new_caches
 
     return serve_step
+
+
+def make_slot_serve_step(model: Model, mesh=None) -> Callable:
+    """Continuous-batching decode step: the batch dim is a table of KV slots
+    at independent depths. ``cache_index`` is (B,) per-slot fill counts and
+    ``slot_mask`` (B,) bool masks inactive lanes' cache writes; greedy argmax
+    stays in-graph so serving syncs one (B,) token vector per step."""
+    def slot_serve_step(params, batch, caches, cache_index, slot_mask):
+        logits, new_caches = model.decode_step(
+            params, batch, caches, cache_index, slot_mask=slot_mask,
+            mesh=mesh)
+        next_tokens = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        return next_tokens, new_caches
+
+    return slot_serve_step
 
 
 # --------------------------------------------------------------------------

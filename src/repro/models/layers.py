@@ -301,11 +301,16 @@ def decode_attention(
     q: jnp.ndarray,  # (B, 1, Hq, D)
     k_cache: jnp.ndarray,  # (B, S, Hkv, D)
     v_cache: jnp.ndarray,
-    cache_index: jnp.ndarray,  # scalar int32: number of valid cache slots
+    cache_index: jnp.ndarray,  # scalar or (B,) int32: valid cache slots
     *,
     window: Optional[int] = None,
 ) -> jnp.ndarray:
-    """Single-token attention against a (possibly ring-buffered) KV cache."""
+    """Single-token attention against a (possibly ring-buffered) KV cache.
+
+    ``cache_index`` may be a scalar (every row at the same depth — the
+    lock-step serve path) or a ``(B,)`` vector (slot-based continuous
+    batching: each row is an independent request at its own depth).
+    """
     B, S, Hkv, D = k_cache.shape
     Hq = q.shape[2]
     G = Hq // Hkv
@@ -314,10 +319,11 @@ def decode_attention(
     s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
                    preferred_element_type=jnp.float32) * scale
     pos = jnp.arange(S)
-    valid = pos < cache_index
+    idx = jnp.reshape(cache_index, (-1, 1))  # (1, 1) or (B, 1)
+    valid = pos[None, :] < idx
     if window is not None:
-        valid &= pos >= (cache_index - window)
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        valid &= pos[None, :] >= (idx - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
                    preferred_element_type=jnp.float32)
@@ -357,7 +363,9 @@ def attention_block(
     seg_ids: Optional[jnp.ndarray],  # (B, S)
     window: Optional[int] = None,
     cache: Optional[Dict] = None,  # {"k","v"} (L?, B, S_max, Hkv, D)
-    cache_index: Optional[jnp.ndarray] = None,
+    cache_index: Optional[jnp.ndarray] = None,  # scalar or (B,) int32
+    slot_mask: Optional[jnp.ndarray] = None,  # (B,) bool: rows allowed to
+    # write their decode KV (inactive serving slots keep their lane intact)
     layer_idx: Optional[jnp.ndarray] = None,  # set when cache is L-stacked
     kv: Optional[jnp.ndarray] = None,  # cross-attention memory (B, Skv, d)
     seg_kv: Optional[jnp.ndarray] = None,
@@ -421,12 +429,18 @@ def attention_block(
         # at a traced slot on the sharded S axis would force GSPMD to gather
         # the whole cache every layer (EXPERIMENTS §Dry-run). The layer slice
         # is read/written via DUS that is dynamic only on the unsharded L.
+        # ``cache_index`` may be per-row (continuous batching): the one-hot
+        # broadcasts over the batch dim either way, and ``slot_mask`` zeroes
+        # the write for inactive slots so their lanes stay untouched.
         slot = cache_index if window is None else cache_index % ring
-        hot = (jax.lax.iota(jnp.int32, ring) == slot)[None, :, None, None]
+        hot = (jax.lax.iota(jnp.int32, ring)[None, :]
+               == jnp.reshape(slot, (-1, 1)))  # (1, ring) or (B, ring)
+        if slot_mask is not None:
+            hot = hot & jnp.reshape(slot_mask, (-1, 1))
 
         def slot_write_nd(buf, new):
             lv = layer_view(buf)
-            hb = hot.reshape((1, ring) + (1,) * (lv.ndim - 2))
+            hb = hot.reshape(hot.shape + (1,) * (lv.ndim - 2))
             lv = jnp.where(hb, new.astype(buf.dtype), lv)
             if layer_idx is None:
                 return lv

@@ -36,6 +36,18 @@ from repro.models.common import ModelConfig
 __all__ = ["init_moe", "moe_ffn"]
 
 
+def _shard_map(body, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions: the top-level binding (and its
+    ``check_vma`` kwarg) only exist in newer jax; older versions expose
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
 def init_moe(key: jax.Array, cfg: ModelConfig, bank: Optional[DictionaryBank]) -> Dict:
     m = cfg.moe
     d, f, E = cfg.d_model, m.d_ff_expert, m.n_experts
@@ -238,12 +250,11 @@ def moe_ffn(
     body = functools.partial(
         _moe_sharded_body, cfg=cfg, sparse_train=sparse_train,
         ep_axis=ep_axis, tp_axis=tp_axis, n_ep=n_ep, dp_axes=dp)
-    fn = jax.shard_map(
+    fn = _shard_map(
         body, mesh=mesh,
         in_specs=(P(dp, None, None), P(None, None),
                   wspec, wspec, wspec_down, dict_spec),
         out_specs=(P(dp, None, None), P()),
-        check_vma=False,
     )
     dicts_in = {k: dicts[k] for k in (dicts or {})} if factorized else {}
     return fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"], dicts_in)

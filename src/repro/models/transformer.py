@@ -111,7 +111,7 @@ class Model:
 
     def _block(self, lp: Dict, x: jnp.ndarray, kind: str, *, dicts, positions,
                seg_ids, cache_l, cache_index, mesh, sparse_train,
-               layer_idx=None):
+               layer_idx=None, slot_mask=None):
         cfg = self.cfg
         aux = jnp.float32(0.0)
         new_cache = None
@@ -121,8 +121,8 @@ class Model:
             a_out, new_cache = L.attention_block(
                 lp["attn"], h, cfg=cfg, dicts=dicts, positions=positions,
                 seg_ids=seg_ids, window=window, cache=cache_l,
-                cache_index=cache_index, layer_idx=layer_idx,
-                sparse_train=sparse_train, mesh=mesh)
+                cache_index=cache_index, slot_mask=slot_mask,
+                layer_idx=layer_idx, sparse_train=sparse_train, mesh=mesh)
             x = x + a_out
             h2 = L.apply_norm(lp["norm2"], x)
             if cfg.moe is not None:
@@ -165,7 +165,8 @@ class Model:
         return L.embed_tokens(params["embed"], batch["inputs"], cfg, positions)
 
     def _stack_forward(self, params, x, *, dicts, positions, seg_ids, caches,
-                       cache_index, mesh, sparse_train, unroll=False):
+                       cache_index, mesh, sparse_train, unroll=False,
+                       slot_mask=None):
         """Run the block stack; returns (x, new_caches, aux)."""
         cfg = self.cfg
         if cfg.uniform_layers and unroll:
@@ -182,7 +183,8 @@ class Model:
                     lp, x, kind, dicts=dicts, positions=positions,
                     seg_ids=seg_ids, cache_l=cur_caches,
                     cache_index=cache_index, mesh=mesh,
-                    sparse_train=sparse_train, layer_idx=i)
+                    sparse_train=sparse_train, layer_idx=i,
+                    slot_mask=slot_mask)
                 aux = aux + aux_l
             return x, cur_caches, aux
         if cfg.uniform_layers:
@@ -203,7 +205,8 @@ class Model:
                     lp, xc, kind, dicts=dicts, positions=positions,
                     seg_ids=seg_ids, cache_l=cache_arg,
                     cache_index=cache_index, mesh=mesh,
-                    sparse_train=sparse_train, layer_idx=li)
+                    sparse_train=sparse_train, layer_idx=li,
+                    slot_mask=slot_mask)
                 if caches is None:
                     return (xc, aux + aux_l), None
                 return (xc, aux + aux_l, new_cache), None
@@ -227,7 +230,8 @@ class Model:
             blk = functools.partial(
                 self._block, kind=cfg.block_kind(i), dicts=dicts,
                 positions=positions, seg_ids=seg_ids, cache_l=cache_l,
-                cache_index=cache_index, mesh=mesh, sparse_train=sparse_train)
+                cache_index=cache_index, mesh=mesh, sparse_train=sparse_train,
+                slot_mask=slot_mask)
             if cfg.remat != "none":
                 policy = getattr(jax.checkpoint_policies, cfg.remat)
                 blk = jax.checkpoint(blk, policy=policy, static_argnums=())
@@ -323,20 +327,30 @@ class Model:
                 for i in range(cfg.n_layers)}
 
     def decode_step(self, params: Dict, batch: Dict, caches,
-                    cache_index: jnp.ndarray, *, mesh=None
+                    cache_index: jnp.ndarray, *, mesh=None,
+                    slot_mask: Optional[jnp.ndarray] = None
                     ) -> Tuple[jnp.ndarray, Any]:
-        """One-token step. batch: {"inputs": (B,1)} or {"embeds": (B,1,d)};
-        cache_index: scalar count of tokens already in the cache."""
+        """One-token step. batch: {"inputs": (B,1)} or {"embeds": (B,1,d)}.
+
+        ``cache_index`` is either a scalar (lock-step decode: every row at
+        the same depth) or a ``(B,)`` vector (continuous batching: row b's
+        cache holds ``cache_index[b]`` tokens and the new token is written
+        there). ``slot_mask`` (``(B,)`` bool) marks rows whose cache may be
+        written — inactive serving slots keep their KV lanes untouched so a
+        freshly admitted request never sees a stale write.
+        """
         cfg = self.cfg
         ref = batch["embeds"] if cfg.external_embeddings else batch["inputs"]
         B = ref.shape[0]
-        positions = jnp.broadcast_to(cache_index.astype(jnp.int32), (B, 1))
+        ci = jnp.asarray(cache_index, jnp.int32)
+        positions = jnp.broadcast_to(jnp.reshape(ci, (-1, 1)), (B, 1))
         dicts = params.get("dicts")
         x = self._embed_in(params, batch, positions)
         x, new_caches, _ = self._stack_forward(
             params, x, dicts=dicts, positions=positions, seg_ids=None,
-            caches=caches, cache_index=cache_index, mesh=mesh,
-            sparse_train=False, unroll=cfg.unroll_decode)
+            caches=caches, cache_index=ci, mesh=mesh,
+            sparse_train=False, unroll=cfg.unroll_decode,
+            slot_mask=slot_mask)
         x = L.apply_norm(params["final_norm"], x)
         logits = L.lm_logits(params["lm_head"], params["embed"], x, cfg)
         return logits, new_caches

@@ -1,2 +1,26 @@
-from repro.serve.batcher import DynamicBatcher, Request  # noqa: F401
+"""Serving layer: T-REX dynamic batching extended to continuous batching.
+
+Architecture (one PR's worth of the ROADMAP's "scale + speed" direction):
+
+* :mod:`repro.serve.scheduler` — iteration-level admission queue.
+  ``Scheduler`` packs short prompts into shared prefill rows (the paper's
+  ≤max/2-pairs / ≤max/4-quads policy) and chunks long ones instead of
+  rejecting them; it absorbed the old ``DynamicBatcher`` (kept as an alias).
+* :mod:`repro.serve.kv_slots` — ``SlotKVCache``, a fixed-capacity table of
+  per-request KV lanes inside one fixed-shape model cache; per-step slot
+  occupancy is the serving analogue of the paper's PE utilization.
+* :mod:`repro.serve.engine` — ``Engine``: packed prefill → lane gather →
+  one jitted decode step over all slots per token, with mid-decode
+  admissions and per-request stop conditions.
+"""
 from repro.serve.engine import Engine  # noqa: F401
+from repro.serve.kv_slots import SlotKVCache  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    Admission,
+    DynamicBatcher,
+    Request,
+    Scheduler,
+)
+
+__all__ = ["Engine", "SlotKVCache", "Scheduler", "DynamicBatcher",
+           "Request", "Admission"]

@@ -1,66 +1,9 @@
-"""T-REX dynamic batching at the serving layer.
-
-The chip monitors input lengths and packs 2/4 short inputs through one
-parameter load (Fig. 23.1.4). The serving analogue: a request queue is
-drained in length-aware groups, short prompts are *packed* into shared
-prefill rows (core/packing.py), and the engine tracks per-request slots so
-one weight sweep serves multiple requests. Utilization (filled token slots /
-total) is the direct counterpart of the paper's PE-utilization metric and is
-reported per batch.
+"""Compatibility shim: ``DynamicBatcher`` was absorbed into
+:class:`repro.serve.scheduler.Scheduler` when the engine moved from
+drain-style batches to iteration-level scheduling over KV slots. ``Request``
+and ``DynamicBatcher`` re-export from there; new code should import
+``Scheduler`` directly.
 """
-from __future__ import annotations
-
-import dataclasses
-from typing import Dict, List, Optional, Sequence
-
-import numpy as np
-
-from repro.core.packing import PackedBatch, PackingPolicy, pack_requests
+from repro.serve.scheduler import DynamicBatcher, Request  # noqa: F401
 
 __all__ = ["Request", "DynamicBatcher"]
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray  # int32 token ids
-    max_new_tokens: int = 16
-    # filled by the engine:
-    output: Optional[List[int]] = None
-
-    def __post_init__(self):
-        if self.output is None:
-            self.output = []
-
-
-class DynamicBatcher:
-    """Greedy length-aware batcher: drain the queue, pack short prompts
-    together (paper policy: <=max/2 pairs, <=max/4 quads), emit fixed-shape
-    packed prefill batches."""
-
-    def __init__(self, max_len: int = 128, max_per_row: int = 4,
-                 max_rows: int = 8):
-        self.policy = PackingPolicy(max_len=max_len, max_per_row=max_per_row)
-        self.max_rows = max_rows
-        self.queue: List[Request] = []
-
-    def submit(self, req: Request) -> None:
-        if len(req.prompt) > self.policy.max_len:
-            raise ValueError(
-                f"prompt len {len(req.prompt)} > max {self.policy.max_len}")
-        self.queue.append(req)
-
-    def next_batch(self) -> Optional[Dict]:
-        if not self.queue:
-            return None
-        # Take up to max_rows * max_per_row requests, longest first (FFD).
-        take = self.queue[: self.max_rows * self.policy.max_per_row]
-        packed = pack_requests([r.prompt for r in take], self.policy)
-        if packed.rows > self.max_rows:
-            # Too many rows -> requeue the shortest requests.
-            while packed.rows > self.max_rows and len(take) > 1:
-                take = take[:-1]
-                packed = pack_requests([r.prompt for r in take], self.policy)
-        self.queue = self.queue[len(take):]
-        util = float((packed.segment_ids > 0).mean())
-        return {"requests": take, "packed": packed, "utilization": util}

@@ -1,18 +1,31 @@
-"""Decode engine: packed prefill (dynamic batching) + batched greedy decode.
+"""Continuous-batching decode engine: packed prefill + slot-based decode.
 
-Small-scale serving driver used by the examples and tests — the full-scale
-decode path (weight-stationary sharding, sequence-sharded caches) is what the
-dry-run lowers via launch/steps.py; this engine runs real tokens through the
-same Model on whatever mesh is available (CPU in CI).
+The seed engine applied the paper's dynamic batching only at prefill, then
+decoded each drained batch in a lock-step Python loop — per-token host sync,
+re-prefilling from scratch, and no admissions until the whole batch finished.
+This engine extends the weight-reuse idea to the decode phase, where real
+serving traffic lives:
 
-Flow per batch:
-  1. DynamicBatcher packs queued prompts into (rows, max_len) slots with
-     segment ids — multiple short requests share one weight sweep, the
-     paper's dynamic batching.
-  2. One packed prefill computes every request's last-prompt-token logits
-     (gathered per request slot from the packed rows).
-  3. Requests then decode in a plain batched loop (one row per request,
-     left-aligned), greedy argmax, stopping at max_new_tokens.
+1. **Packed prefill** (unchanged in spirit): the scheduler packs queued
+   short prompts into shared ``(rows, max_len)`` rows with segment ids; one
+   weight sweep prefills them all and yields each request's first token.
+   Prompts longer than ``max_len`` are chunked and prefilled solo instead of
+   being rejected.
+2. **Lane gather**: each admitted request's KV segment is gathered out of
+   the prefill cache into a free lane of a fixed-capacity
+   :class:`~repro.serve.kv_slots.SlotKVCache` (segment masking made the
+   packed K/V identical to an unpacked computation, so this is exact).
+3. **Continuous decode**: every step is ONE jitted fixed-shape call over all
+   ``num_slots`` lanes — per-slot cache indices, active-slot masking, greedy
+   argmax inside the graph — so the only host traffic per step is a single
+   ``(num_slots,)`` token fetch, not a round-trip per request per token.
+   Finished requests (per-request ``max_new_tokens`` or ``eos_id``) release
+   their slot; freed slots are refilled from the queue *mid-decode*, keeping
+   the slot table — the serving analogue of the paper's PE array — full.
+
+``stats`` records one entry per prefill sweep (legacy keys ``rows`` /
+``n_requests`` / ``utilization``); ``decode_stats`` aggregates the per-step
+slot utilization and token counts after :meth:`run`.
 """
 from __future__ import annotations
 
@@ -23,87 +36,281 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import Model
-from repro.serve.batcher import DynamicBatcher, Request
+from repro.serve.kv_slots import SlotKVCache
+from repro.serve.scheduler import Admission, Request, Scheduler
 
 __all__ = ["Engine"]
 
 
 class Engine:
     def __init__(self, model: Model, params, max_len: int = 128,
-                 max_new_tokens: int = 16, mesh=None):
+                 max_new_tokens: int = 16, mesh=None, num_slots: int = 8,
+                 max_prompt_len: Optional[int] = None,
+                 eos_id: Optional[int] = None, max_rows: int = 8):
         self.model = model
         self.params = params
         self.max_len = max_len
         self.max_new = max_new_tokens
         self.mesh = mesh
-        self.batcher = DynamicBatcher(max_len=max_len)
-        self.stats: List[Dict] = []
+        self.eos_id = eos_id
+        self.num_slots = num_slots
+        # Cache lanes must hold the longest admissible prompt plus the
+        # decode budget; prompts up to 2*max_len are admitted by default via
+        # the chunking path (raise max_prompt_len for longer traffic).
+        self.max_prompt_len = max_prompt_len or 2 * max_len
+        self.cache_len = self.max_prompt_len + self.max_new
+        self.scheduler = Scheduler(max_len=max_len, max_rows=max_rows,
+                                   max_prompt_len=self.max_prompt_len)
+        try:
+            self.slots: Optional[SlotKVCache] = SlotKVCache(
+                model, num_slots, self.cache_len)
+        except NotImplementedError:
+            # Recurrent states / short ring buffers can't be lane-gathered
+            # yet (see kv_slots.py): fall back to seed-style lock-step
+            # decode so those architectures keep serving.
+            self.slots = None
+        kinds = {model.cfg.block_kind(i) for i in range(model.cfg.n_layers)}
+        # SSD's chunked scan needs prefill widths that are chunk multiples.
+        self._ssd_chunk = model.cfg.ssm.chunk \
+            if "ssd" in kinds and model.cfg.ssm else None
+        self.stats: List[Dict] = []  # one entry per prefill sweep
+        self.decode_stats: Dict = {}
 
-        cfg = model.cfg
-        self._prefill = jax.jit(
-            lambda p, b: model.apply(p, b)[0])
-        self._decode = jax.jit(
-            lambda p, b, c, i: model.decode_step(p, b, c, i))
+        def prefill_fn(params, batch):
+            rows, width = batch["inputs"].shape
+            caches = model.init_cache(rows, width)
+            logits, new_caches, _ = model.apply(
+                params, batch, caches=caches, cache_index=jnp.int32(0),
+                mesh=mesh)
+            return logits, new_caches
+
+        def decode_fn(params, tokens, caches, lengths, active):
+            logits, new_caches = model.decode_step(
+                params, {"inputs": tokens}, caches, lengths,
+                slot_mask=active, mesh=mesh)
+            nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+            return nxt, new_caches
+
+        def lockstep_prefill_fn(params, batch):
+            # Prefill exactly the prompt tokens into a cache sized for the
+            # decode budget (padding the prompt instead would push pad KV
+            # into windowed ring buffers).
+            rows, width = batch["inputs"].shape
+            caches = model.init_cache(rows, width + max_new_tokens)
+            logits, new_caches, _ = model.apply(
+                params, batch, caches=caches, cache_index=jnp.int32(0),
+                mesh=mesh)
+            return logits, new_caches
+
+        def lockstep_decode_fn(params, tokens, caches, idx):
+            logits, new_caches = model.decode_step(
+                params, {"inputs": tokens}, caches, idx, mesh=mesh)
+            return (jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32),
+                    new_caches)
+
+        # One compile per prefill shape — widths are max_len multiples and
+        # packed row counts are padded to powers of two, so the set is small
+        # and bounded — and exactly one for decode: shapes never depend on
+        # which requests are in flight. Donating the cache lets accelerators
+        # update it in place (CPU doesn't implement donation; skip there).
+        donate = (2,) if jax.default_backend() != "cpu" else ()
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn, donate_argnums=donate)
+        self._prefill_lockstep = jax.jit(lockstep_prefill_fn)
+        self._decode_lockstep = jax.jit(lockstep_decode_fn,
+                                        donate_argnums=donate)
+
+    # ------------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
-        self.batcher.submit(req)
+        self.scheduler.submit(req)
 
     def run(self) -> List[Request]:
-        """Drain the queue; returns completed requests."""
+        """Serve until queue and slots are empty; returns finished requests
+        in completion order."""
+        if self.slots is None:
+            return self._run_lockstep()
+        sl = self.slots
         done: List[Request] = []
-        while True:
-            batch = self.batcher.next_batch()
-            if batch is None:
-                break
-            done.extend(self._run_batch(batch))
+        cur = np.zeros(self.num_slots, np.int32)      # next input token
+        emitted = np.zeros(self.num_slots, np.int32)  # tokens emitted so far
+        budget = np.zeros(self.num_slots, np.int32)
+        steps = 0
+        active_slot_steps = 0
+        decoded_tokens = 0
+
+        while self.scheduler.pending() or sl.active.any():
+            if self.scheduler.pending():
+                free = sl.free_slots()
+                if free.size:
+                    self._admit(free, cur, emitted, budget, done)
+            active_ix = np.flatnonzero(sl.active)
+            if active_ix.size == 0:
+                continue  # everything admitted finished at prefill
+
+            nxt, sl.caches = self._decode(
+                self.params, jnp.asarray(cur[:, None]), sl.caches,
+                jnp.asarray(sl.lengths), jnp.asarray(sl.active))
+            nxt = np.asarray(nxt)  # the step's single host sync
+            steps += 1
+            active_slot_steps += active_ix.size
+            for s in active_ix:
+                sl.advance(s)
+                tok = int(nxt[s])
+                req = sl.request[s]
+                req.output.append(tok)
+                emitted[s] += 1
+                cur[s] = tok
+                decoded_tokens += 1
+                if emitted[s] >= budget[s] or tok == self.eos_id:
+                    done.append(req)
+                    sl.release(s)
+
+        self.decode_stats = {
+            "steps": steps,
+            "decoded_tokens": decoded_tokens,
+            "slot_utilization": (active_slot_steps
+                                 / max(steps * self.num_slots, 1)),
+        }
         return done
 
-    def _run_batch(self, batch: Dict) -> List[Request]:
-        packed = batch["packed"]
-        reqs: List[Request] = batch["requests"]
-        # ---- packed prefill: one weight sweep for all packed requests.
-        logits = self._prefill(self.params, {
-            "inputs": jnp.asarray(packed.tokens),
-            "positions": jnp.asarray(packed.positions),
-            "seg_ids": jnp.asarray(packed.segment_ids),
-        })
-        first_tokens = []
-        for i, _ in enumerate(reqs):
-            row, start, length = packed.request_slots[i]
-            first_tokens.append(int(jnp.argmax(logits[row, start + length - 1])))
-        self.stats.append({"rows": packed.rows, "n_requests": len(reqs),
-                           "utilization": batch["utilization"]})
+    # ------------------------------------------------------------------
 
-        # ---- batched decode, one row per request (left-aligned prompts).
-        B = len(reqs)
-        maxp = max(len(r.prompt) for r in reqs)
-        total = maxp + self.max_new + 1
-        rows = np.zeros((B, maxp), np.int32)
-        seg = np.zeros((B, maxp), np.int32)
-        pos = np.zeros((B, maxp), np.int32)
-        for i, r in enumerate(reqs):
-            L = len(r.prompt)
-            rows[i, :L] = r.prompt
-            seg[i, :L] = 1
-            pos[i, :L] = np.arange(L)
-        # NOTE: per-request cache_index would differ with ragged prompts; we
-        # right-pad and rely on segment masking for the prefill, then decode
-        # from the common max prompt length (padding rows attend only within
-        # their segment). Simple and correct for greedy decoding.
-        _, caches = self.model.prefill(
-            self.params, {"inputs": jnp.asarray(rows),
-                          "positions": jnp.asarray(pos),
-                          "seg_ids": jnp.asarray(seg)},
-            max_len=total, mesh=self.mesh)
-        cur = jnp.asarray([[t] for t in first_tokens], jnp.int32)
-        idx = jnp.int32(maxp)
-        for i, r in enumerate(reqs):
-            r.output.append(int(cur[i, 0]))
-        for _ in range(self.max_new - 1):
-            logits, caches = self._decode(self.params, {"inputs": cur},
-                                          caches, idx)
-            cur = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(jnp.int32)
-            idx = idx + 1
+    def _admit(self, free: np.ndarray, cur, emitted, budget,
+               done: List[Request]) -> None:
+        """Prefill one round of admissions into the free slots."""
+        groups = self.scheduler.next_admissions(len(free))
+        fi = 0
+        for adm in groups:
+            logits, caches, slots_of = self._prefill_admission(adm)
+            logits = np.asarray(logits)
+            for i, req in enumerate(adm.requests):
+                row, start, length = slots_of[i]
+                req_budget = min(req.max_new_tokens, self.max_new)
+                if req_budget <= 0:
+                    done.append(req)  # nothing requested; no token emitted
+                    continue
+                first = int(np.argmax(logits[row, start + length - 1]))
+                req.output.append(first)
+                if req_budget <= 1 or first == self.eos_id:
+                    done.append(req)  # finished at prefill; slot stays free
+                    continue
+                slot = int(free[fi])
+                fi += 1
+                self.slots.assign(slot, req, caches, row, start, length)
+                cur[slot] = first
+                emitted[slot] = 1
+                budget[slot] = req_budget
+
+    def _prefill_admission(self, adm: Admission):
+        """Run one prefill sweep; returns (all-position logits, filled
+        caches, per-request (row, start, length))."""
+        if adm.packed is not None:
+            packed = adm.packed
+            rows = packed.rows
+            # Pad the row count to a power of two: bounds the set of packed
+            # prefill shapes (and therefore XLA compiles) to log2(max_rows)
+            # variants; padding rows ride segment id 0 => fully masked.
+            pad_rows = 1 << (rows - 1).bit_length()
+            pad = ((0, pad_rows - rows), (0, 0))
+            batch = {"inputs": jnp.asarray(np.pad(packed.tokens, pad)),
+                     "positions": jnp.asarray(np.pad(packed.positions, pad)),
+                     "seg_ids": jnp.asarray(np.pad(packed.segment_ids, pad))}
+            slots_of = packed.request_slots
+        else:  # solo long prompt, width = n_chunks * max_len
+            prompt = np.concatenate(adm.chunks)
+            width = len(adm.chunks) * self.max_len
+            tokens = np.zeros((1, width), np.int32)
+            seg = np.zeros((1, width), np.int32)
+            L = len(prompt)
+            tokens[0, :L] = prompt
+            seg[0, :L] = 1
+            batch = {"inputs": jnp.asarray(tokens),
+                     "positions": jnp.asarray(
+                         np.arange(width, dtype=np.int32)[None]),
+                     "seg_ids": jnp.asarray(seg)}
+            slots_of = [(0, 0, L)]
+            rows = 1
+        logits, caches = self._prefill(self.params, batch)
+        self.stats.append({"rows": rows, "n_requests": len(adm.requests),
+                           "utilization": adm.utilization})
+        return logits, caches, slots_of
+
+    # ------------------------------------------------------------------
+    # lock-step fallback (recurrent / short-ring caches)
+    # ------------------------------------------------------------------
+
+    def _run_lockstep(self) -> List[Request]:
+        """Seed-style decode for stacks SlotKVCache can't hold: drain the
+        queue in static left-aligned batches, scalar cache index, no
+        mid-decode admissions. Keeps submit/run/stats semantics so every
+        architecture stays servable; the continuous path is strictly better
+        where it applies."""
+        done: List[Request] = []
+        steps = 0
+        active_row_steps = 0
+        row_steps = 0
+        decoded = 0
+        while True:
+            nb = self.scheduler.next_batch()
+            if nb is None:
+                break
+            reqs = nb["requests"]
+            B = len(reqs)
+            maxp = max(len(r.prompt) for r in reqs)
+            # SSD stacks scan the prefill in fixed chunks: round the width
+            # up to a chunk multiple (trailing pads ride segment id 0).
+            q = self._ssd_chunk
+            if q is not None and maxp > q and maxp % q:
+                maxp = ((maxp + q - 1) // q) * q
+            rows = np.zeros((B, maxp), np.int32)
+            seg = np.zeros((B, maxp), np.int32)
+            pos = np.tile(np.arange(maxp, dtype=np.int32), (B, 1))
             for i, r in enumerate(reqs):
-                r.output.append(int(cur[i, 0]))
-        return reqs
+                L = len(r.prompt)
+                rows[i, :L] = r.prompt
+                seg[i, :L] = 1
+            # all-position logits + caches sized for the decode budget
+            logits, caches = self._prefill_lockstep(
+                self.params, {"inputs": jnp.asarray(rows),
+                              "positions": jnp.asarray(pos),
+                              "seg_ids": jnp.asarray(seg)})
+            logits = np.asarray(logits)
+            self.stats.append({"rows": B, "n_requests": B,
+                               "utilization": float(seg.mean())})
+            budgets = [min(r.max_new_tokens, self.max_new) for r in reqs]
+            finished = [False] * B
+            cur = np.zeros((B, 1), np.int32)
+            for i, r in enumerate(reqs):
+                tok = int(np.argmax(logits[i, len(r.prompt) - 1]))
+                cur[i, 0] = tok
+                if budgets[i] >= 1:
+                    r.output.append(tok)
+                finished[i] = budgets[i] <= 1 or tok == self.eos_id
+            idx = jnp.int32(maxp)
+            for _ in range(max(budgets) - 1 if budgets else 0):
+                if all(finished):
+                    break
+                toks, caches = self._decode_lockstep(
+                    self.params, jnp.asarray(cur), caches, idx)
+                toks = np.asarray(toks)
+                idx = idx + 1
+                steps += 1
+                row_steps += B
+                for i, r in enumerate(reqs):
+                    tok = int(toks[i])
+                    cur[i, 0] = tok
+                    if finished[i]:
+                        continue
+                    active_row_steps += 1
+                    r.output.append(tok)
+                    decoded += 1
+                    finished[i] = (len(r.output) >= budgets[i]
+                                   or tok == self.eos_id)
+            done.extend(reqs)
+        self.decode_stats = {
+            "steps": steps,
+            "decoded_tokens": decoded,
+            "slot_utilization": active_row_steps / max(row_steps, 1),
+        }
+        return done

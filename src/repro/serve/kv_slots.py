@@ -1,0 +1,136 @@
+"""Slot table of per-request KV cache lanes for continuous batching.
+
+The decode-side counterpart of the paper's dynamic batching: a fixed-capacity
+``SlotKVCache`` holds ``num_slots`` independent KV lanes inside one
+fixed-shape model cache (batch dim = slots), so the engine's decode step is a
+single jitted call over *all* slots regardless of which requests occupy them.
+Request lifecycles only touch host-side metadata plus a lane copy:
+
+* ``assign`` gathers a request's KV segment out of a (packed or solo)
+  prefill cache — rows of a packed prefill interleave several requests, and
+  ``request_slots`` says where each one's tokens landed — and writes it into
+  a free lane at positions ``[0, len)``.
+* ``release`` just flips the host-side ``active`` bit; the stale lane is
+  masked out of the decode step via ``slot_mask`` and overwritten by the
+  next ``assign``.
+
+Per-step slot occupancy (`utilization()`) is the serving analogue of the
+paper's PE-utilization metric: idle lanes are idle PEs under a shared weight
+sweep.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import Model
+
+__all__ = ["SlotKVCache"]
+
+
+class SlotKVCache:
+    """Fixed-capacity table of per-request KV cache lanes.
+
+    ``caches`` is a regular model cache pytree with batch dim ``num_slots``
+    and sequence dim ``cache_len``; lane ``s`` belongs to whatever request
+    ``request[s]`` points at. ``lengths[s]`` is the number of valid cached
+    tokens in lane ``s`` (== the next write position for decode).
+    """
+
+    def __init__(self, model: Model, num_slots: int, cache_len: int):
+        cfg = model.cfg
+        kinds = {cfg.block_kind(i) for i in range(cfg.n_layers)}
+        if not kinds <= {"attn", "local"}:
+            raise NotImplementedError(
+                f"SlotKVCache supports attention caches only, got {kinds} — "
+                "recurrent states cannot be gathered out of packed rows")
+        windows = [cfg.local_window if cfg.block_kind(i) == "local"
+                   else cfg.sliding_window for i in range(cfg.n_layers)]
+        if any(w is not None and w < cache_len for w in windows):
+            raise NotImplementedError(
+                "SlotKVCache does not support ring-buffered (windowed) "
+                f"caches shorter than cache_len={cache_len}")
+        if num_slots <= 0 or cache_len <= 0:
+            raise ValueError("num_slots and cache_len must be positive")
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        self._stacked = cfg.uniform_layers  # leaves carry a leading L dim
+        self.caches = model.init_cache(num_slots, cache_len)
+        # host-side slot metadata
+        self.active = np.zeros(num_slots, bool)
+        self.lengths = np.zeros(num_slots, np.int32)
+        self.request: List[Optional[Any]] = [None] * num_slots
+        # Lane copies run as one fused jit (one compile per source width);
+        # donating the slot cache lets accelerators update it in place (CPU
+        # doesn't implement donation, so skip the warning there).
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        self._copy = jax.jit(self._copy_lane, donate_argnums=donate)
+
+    # ------------------------------------------------------------------
+
+    def free_slots(self) -> np.ndarray:
+        return np.flatnonzero(~self.active)
+
+    def utilization(self) -> float:
+        return float(self.active.mean())
+
+    def _copy_lane(self, dst_caches, src_caches, slot, row, start, length):
+        """Write ``src[row, start:start+length]`` into lane ``slot`` at
+        ``[0:length]`` (remainder zeroed — decode masks positions >= length
+        anyway). Static shapes throughout: the lane is gathered with clipped
+        indices and merged via a one-hot select over slots, so one jit
+        covers every (slot, row, start, length) for a given source width."""
+        ba = 1 if self._stacked else 0  # batch axis of every cache leaf
+        seq_pos = start + jnp.arange(self.cache_len)
+        valid = jnp.arange(self.cache_len) < length
+        hot = jnp.arange(self.num_slots) == slot
+
+        def per_leaf(dst, src):
+            w = src.shape[ba + 1]
+            src_row = jax.lax.dynamic_index_in_dim(src, row, axis=ba,
+                                                   keepdims=False)
+            gathered = jnp.take(src_row, jnp.clip(seq_pos, 0, w - 1),
+                                axis=ba)
+            vshape = (1,) * ba + (self.cache_len,) + \
+                (1,) * (gathered.ndim - ba - 1)
+            lane = jnp.where(valid.reshape(vshape), gathered,
+                             0).astype(dst.dtype)
+            hshape = (1,) * ba + (self.num_slots, 1) + \
+                (1,) * (dst.ndim - ba - 2)
+            return jnp.where(hot.reshape(hshape),
+                             jnp.expand_dims(lane, ba), dst)
+
+        return jax.tree.map(per_leaf, dst_caches, src_caches)
+
+    def assign(self, slot: int, request, src_caches, row: int, start: int,
+               length: int) -> None:
+        """Claim ``slot`` for ``request``; copy its KV segment
+        ``src_caches[row, start:start+length]`` into the lane at ``[0:length]``.
+
+        ``src_caches`` is the cache filled by a prefill over packed rows (or
+        a solo row); segment masking made each request's K/V identical to an
+        unpacked computation, so the gathered lane decodes exactly as if the
+        request had been prefilled alone.
+        """
+        if self.active[slot]:
+            raise ValueError(f"slot {slot} is already occupied")
+        if length > self.cache_len:
+            raise ValueError(
+                f"request length {length} exceeds cache_len {self.cache_len}")
+        self.caches = self._copy(self.caches, src_caches, jnp.int32(slot),
+                                 jnp.int32(row), jnp.int32(start),
+                                 jnp.int32(length))
+        self.active[slot] = True
+        self.lengths[slot] = length
+        self.request[slot] = request
+
+    def advance(self, slot: int) -> None:
+        """One decoded token was written into the lane at ``lengths[slot]``."""
+        self.lengths[slot] += 1
+
+    def release(self, slot: int) -> None:
+        self.active[slot] = False
+        self.request[slot] = None

@@ -1,0 +1,166 @@
+"""Iteration-level request scheduler for continuous batching.
+
+T-REX packs 2/4 short inputs through one parameter load (Fig. 23.1.4); the
+serving analogue packs short prompts into shared prefill rows. The scheduler
+extends that from batch granularity to *iteration* granularity: every decode
+step the engine asks for admissions to fill freed KV slots, so one weight
+sweep keeps serving a full complement of requests instead of draining a
+static batch in lock-step.
+
+Admission groups come in two flavors:
+
+* **packed** — up to ``free_slots`` short prompts (≤ ``max_len``) packed
+  first-fit-decreasing into shared ``(rows, max_len)`` prefill rows with
+  segment ids (``core/packing.py``), the paper's ≤max/2-pairs / ≤max/4-quads
+  policy included.
+* **solo** — a prompt longer than ``max_len`` is *chunked*
+  (``chunk_prompt``) instead of rejected: it is admitted alone with prefill
+  width ``len(chunks) * max_len``, bounding the set of compiled prefill
+  shapes.
+
+``Scheduler`` also keeps the legacy :meth:`next_batch` drain interface so
+callers of the absorbed ``DynamicBatcher`` keep working (``DynamicBatcher``
+is now an alias of this class).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.packing import (
+    PackedBatch,
+    PackingPolicy,
+    chunk_prompt,
+    pack_requests,
+)
+
+__all__ = ["Request", "Admission", "Scheduler", "DynamicBatcher"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # int32 token ids
+    max_new_tokens: int = 16
+    # filled by the engine:
+    output: Optional[List[int]] = None
+
+    def __post_init__(self):
+        if self.output is None:
+            self.output = []
+
+
+@dataclasses.dataclass
+class Admission:
+    """One prefill sweep's worth of admitted requests.
+
+    ``packed`` is the shared-row batch for short prompts; ``None`` marks a
+    solo long prompt whose ``chunks`` concatenate back to the full prompt
+    and whose prefill width is ``len(chunks) * max_len``.
+    """
+
+    requests: List[Request]
+    packed: Optional[PackedBatch] = None
+    chunks: Optional[List[np.ndarray]] = None
+
+    @property
+    def utilization(self) -> float:
+        """Filled fraction of the prefill token slots this sweep."""
+        if self.packed is not None:
+            return float((self.packed.segment_ids > 0).mean())
+        total = sum(len(c) for c in self.chunks)
+        width = len(self.chunks) * len(self.chunks[0])
+        return total / max(width, 1)
+
+
+class Scheduler:
+    """Length-aware admission queue over a slotted KV cache.
+
+    FIFO with packing: each call to :meth:`next_admissions` walks the queue
+    head, groups short prompts into one packed prefill, and emits long
+    prompts as solo chunked prefills, never admitting more requests than
+    there are free slots.
+    """
+
+    def __init__(self, max_len: int = 128, max_per_row: int = 4,
+                 max_rows: int = 8, max_prompt_len: Optional[int] = None):
+        self.policy = PackingPolicy(max_len=max_len, max_per_row=max_per_row)
+        self.max_rows = max_rows
+        self.max_prompt_len = max_prompt_len
+        self.queue: List[Request] = []
+
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        """Queue a request. Prompts longer than ``max_len`` are accepted and
+        routed through the chunking path; only the engine's hard cache bound
+        (``max_prompt_len``, when set) rejects."""
+        n = len(req.prompt)
+        if n == 0:
+            raise ValueError("empty prompt")
+        if self.max_prompt_len is not None and n > self.max_prompt_len:
+            raise ValueError(
+                f"prompt len {n} > max_prompt_len {self.max_prompt_len} "
+                "(cache capacity); raise the engine's max_prompt_len")
+        self.queue.append(req)
+
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def next_admissions(self, free_slots: int) -> List[Admission]:
+        """Admit up to ``free_slots`` queued requests as admission groups."""
+        groups: List[Admission] = []
+        shorts: List[Request] = []
+        taken = 0
+        while self.queue and taken < free_slots:
+            req = self.queue[0]
+            if len(req.prompt) > self.policy.max_len:
+                self.queue.pop(0)
+                groups.append(Admission(
+                    requests=[req],
+                    chunks=chunk_prompt(req.prompt, self.policy.max_len)))
+            else:
+                shorts.append(self.queue.pop(0))
+            taken += 1
+        if shorts:
+            packed = pack_requests([r.prompt for r in shorts], self.policy)
+            while packed.rows > self.max_rows and len(shorts) > 1:
+                self.queue.insert(0, shorts.pop())
+                packed = pack_requests([r.prompt for r in shorts], self.policy)
+            groups.append(Admission(requests=shorts, packed=packed))
+        return groups
+
+    # ------------------------------------------------------------------
+    # legacy DynamicBatcher drain interface
+    # ------------------------------------------------------------------
+
+    def next_batch(self) -> Optional[Dict]:
+        """Drain-style batches (the absorbed ``DynamicBatcher`` API): packed
+        prefill batches for short prompts, solo chunked entries (``packed``
+        is ``None``) for long ones."""
+        if not self.queue:
+            return None
+        head = self.queue[0]
+        if len(head.prompt) > self.policy.max_len:
+            adm = self.next_admissions(1)[0]
+            return {"requests": adm.requests, "packed": None,
+                    "chunks": adm.chunks, "utilization": adm.utilization}
+        # contiguous run of short prompts from the head, packed together
+        take: List[Request] = []
+        limit = self.max_rows * self.policy.max_per_row
+        while (self.queue and len(take) < limit
+               and len(self.queue[0].prompt) <= self.policy.max_len):
+            take.append(self.queue.pop(0))
+        packed = pack_requests([r.prompt for r in take], self.policy)
+        while packed.rows > self.max_rows and len(take) > 1:
+            self.queue.insert(0, take.pop())
+            packed = pack_requests([r.prompt for r in take], self.policy)
+        util = float((packed.segment_ids > 0).mean())
+        return {"requests": take, "packed": packed, "utilization": util}
+
+
+# DynamicBatcher was absorbed into Scheduler; the name stays as an alias so
+# existing imports (and its submit/next_batch interface) keep working.
+DynamicBatcher = Scheduler

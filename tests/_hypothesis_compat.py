@@ -1,0 +1,113 @@
+"""Hypothesis compatibility shim for environments without the package.
+
+The tier-1 suite uses a small slice of hypothesis (``@given`` over
+``integers`` / ``lists`` / ``sampled_from`` / ``floats`` strategies with
+``@settings(max_examples=..., deadline=None)``). When the real package is
+installed it is re-exported untouched and the tests get full shrinking and
+example databases. When it is absent — the CI container bakes in the JAX
+toolchain but not hypothesis — this module degrades ``@given`` to a
+deterministic example grid: the first example is each strategy's minimal
+value, the rest are drawn from a seeded ``numpy`` RNG, so the property tests
+still collect and exercise ``max_examples`` distinct inputs everywhere.
+
+Usage in test modules (drop-in for ``from hypothesis import ...``)::
+
+    from _hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import sys
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A value source: ``minimal()`` for example #0, ``sample(rng)`` for
+        the rest. Composes (lists of integers, tuples of strategies)."""
+
+        def __init__(self, sample, minimal):
+            self._sample = sample
+            self._minimal = minimal
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+        def minimal(self):
+            return self._minimal()
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                lambda: min_value)
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            lo, hi = float(min_value), float(max_value)
+            return _Strategy(lambda rng: float(rng.uniform(lo, hi)),
+                             lambda: lo)
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)),
+                             lambda: False)
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            if not seq:
+                raise ValueError("sampled_from requires a non-empty sequence")
+            return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))],
+                             lambda: seq[0])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(
+                lambda rng: [elements.sample(rng) for _ in range(
+                    int(rng.integers(min_size, max_size + 1)))],
+                lambda: [elements.minimal() for _ in range(min_size)])
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(
+                lambda rng: tuple(s.sample(rng) for s in strats),
+                lambda: tuple(s.minimal() for s in strats))
+
+    def settings(max_examples=None, deadline=None, **_kw):  # noqa: ARG001
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            n = getattr(fn, "_compat_max_examples", None) or 10
+
+            # (*args, **kwargs) signature on purpose: pytest must not read
+            # the strategy parameter names as fixture requests.
+            def wrapper(*args, **kwargs):
+                rng = np.random.default_rng(0)
+                for i in range(n):
+                    if i == 0:
+                        vals = [s.minimal() for s in strats]
+                    else:
+                        vals = [s.sample(rng) for s in strats]
+                    try:
+                        fn(*args, *vals, **kwargs)
+                    except BaseException:
+                        print(f"falsifying example (shim) #{i}: {vals!r}",
+                              file=sys.stderr)
+                        raise
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

@@ -2,7 +2,7 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.core.packing import PackingPolicy, pack_requests, packing_utilization
@@ -42,6 +42,60 @@ def test_pack_requests_invariants(lengths, seed):
         segs = set(packed.segment_ids[row][used[row]].tolist())
         assert len(segs) <= pol.max_per_row
     assert 0 < packing_utilization(packed) <= 1.0
+
+
+@given(st.integers(1, 512), st.sampled_from([16, 32, 128, 256]),
+       st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=60, deadline=None)
+def test_bucket_policy_properties(length, max_len, max_per_row):
+    """share is a power of two <= max_per_row, the length fits the bucket,
+    and the bucket is the deepest admissible one (paper policy)."""
+    pol = PackingPolicy(max_len=max_len, max_per_row=max_per_row)
+    if length > max_len:
+        with pytest.raises(ValueError):
+            pol.bucket(length)
+        return
+    share = pol.bucket(length)
+    assert share & (share - 1) == 0 and 1 <= share <= max_per_row
+    # the length fits share-to-a-row...
+    assert length <= max_len // share or share == 1
+    # ...and would NOT fit one level deeper (unless capped by max_per_row)
+    if share < max_per_row:
+        assert length > max_len // (share * 2)
+
+
+@given(st.lists(st.integers(1, 128), min_size=1, max_size=40),
+       st.integers(0, 3))
+@settings(max_examples=40, deadline=None)
+def test_pack_requests_slots_disjoint_and_complete(lengths, seed):
+    """request_slots are pairwise disjoint row segments, and together they
+    tile exactly the nonzero segment-id cells: every token lands in exactly
+    one row segment."""
+    rng = np.random.default_rng(seed)
+    reqs = [rng.integers(1, 100, size=n).astype(np.int32) for n in lengths]
+    pol = PackingPolicy(max_len=128, max_per_row=4)
+    packed = pack_requests(reqs, pol)
+    claimed = np.zeros_like(packed.segment_ids, bool)
+    for row, start, L in packed.request_slots:
+        assert 0 <= start and start + L <= pol.max_len
+        assert not claimed[row, start:start + L].any(), "overlapping slots"
+        claimed[row, start:start + L] = True
+    np.testing.assert_array_equal(claimed, packed.segment_ids > 0)
+
+
+@given(st.lists(st.integers(1, 64), min_size=1, max_size=30),
+       st.sampled_from([64, 128]))
+@settings(max_examples=30, deadline=None)
+def test_packing_utilization_matches_brute_force(lengths, max_len):
+    pol = PackingPolicy(max_len=max_len, max_per_row=4)
+    reqs = [np.ones(n, np.int32) for n in lengths]
+    packed = pack_requests(reqs, pol)
+    brute = sum(int((packed.segment_ids[r] == i + 1).sum())
+                for r in range(packed.rows)
+                for i in range(len(reqs)))
+    assert brute == sum(lengths)
+    assert packing_utilization(packed) == pytest.approx(
+        sum(lengths) / (packed.rows * max_len))
 
 
 def test_packing_improves_utilization_for_short_requests():

@@ -1,0 +1,241 @@
+"""Continuous-batching engine: slot KV cache, scheduler, and exact
+equivalence of packed-prefill + slot-based decode vs unpacked decoding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.packing import chunk_prompt
+from repro.models.transformer import Model
+from repro.serve import (
+    DynamicBatcher,
+    Engine,
+    Request,
+    Scheduler,
+    SlotKVCache,
+)
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("qwen2.5-32b", "smoke")
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    return cfg, m, params
+
+
+def _reference_greedy(model, params, prompt, n_tokens):
+    """Single-request unpacked greedy decode by full re-forward."""
+    seq = list(prompt)
+    out = []
+    for _ in range(n_tokens):
+        logits, _, _ = model.apply(params, {"inputs": jnp.asarray(seq)[None]})
+        t = int(jnp.argmax(logits[0, -1]))
+        out.append(t)
+        seq.append(t)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# chunking / long-prompt submit (regression: used to raise ValueError)
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_prompt_roundtrip():
+    rng = np.random.default_rng(0)
+    for n in (1, 15, 16, 17, 40, 64):
+        prompt = rng.integers(0, 100, size=n).astype(np.int32)
+        chunks = chunk_prompt(prompt, 16)
+        assert all(len(c) <= 16 for c in chunks)
+        assert all(len(c) == 16 for c in chunks[:-1])
+        np.testing.assert_array_equal(np.concatenate(chunks), prompt)
+    with pytest.raises(ValueError):
+        chunk_prompt(np.zeros(0, np.int32), 16)
+
+
+def test_dynamic_batcher_accepts_long_prompts():
+    """Regression: submit used to raise for prompts > max_len."""
+    b = DynamicBatcher(max_len=16)
+    long_prompt = np.arange(40, dtype=np.int32)
+    b.submit(Request(rid=0, prompt=long_prompt))  # must not raise
+    batch = b.next_batch()
+    assert batch["packed"] is None
+    assert len(batch["chunks"]) == 3
+    np.testing.assert_array_equal(np.concatenate(batch["chunks"]), long_prompt)
+    assert b.next_batch() is None
+
+
+def test_engine_rejects_only_beyond_cache_capacity():
+    cfg = get_config("qwen2.5-32b", "smoke")
+    eng = Engine(Model(cfg), params=None, max_len=16, num_slots=2)
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=0, prompt=np.arange(
+            eng.max_prompt_len + 1, dtype=np.int32)))
+
+
+def test_long_prompt_decodes_exactly(smoke_model):
+    cfg, m, params = smoke_model
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, size=25).astype(np.int32)
+    eng = Engine(m, params, max_len=16, max_new_tokens=4, num_slots=2)
+    eng.submit(Request(rid=0, prompt=prompt))
+    out = eng.run()[0].output
+    assert out == _reference_greedy(m, params, prompt, 4)
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_admits_at_most_free_slots():
+    s = Scheduler(max_len=16)
+    for rid in range(10):
+        s.submit(Request(rid=rid, prompt=np.arange(1 + rid % 5,
+                                                   dtype=np.int32) + 1))
+    groups = s.next_admissions(3)
+    assert sum(len(g.requests) for g in groups) == 3
+    assert s.pending() == 7
+    assert s.next_admissions(0) == []
+    assert s.pending() == 7
+
+
+def test_scheduler_mixes_packed_and_solo_groups():
+    s = Scheduler(max_len=16)
+    s.submit(Request(rid=0, prompt=np.ones(4, np.int32)))
+    s.submit(Request(rid=1, prompt=np.ones(40, np.int32)))  # long -> solo
+    s.submit(Request(rid=2, prompt=np.ones(6, np.int32)))
+    groups = s.next_admissions(3)
+    solos = [g for g in groups if g.packed is None]
+    packed = [g for g in groups if g.packed is not None]
+    assert len(solos) == 1 and solos[0].requests[0].rid == 1
+    assert len(packed) == 1 and {r.rid for r in packed[0].requests} == {0, 2}
+    assert 0 < solos[0].utilization <= 1
+    assert 0 < packed[0].utilization <= 1
+
+
+# ---------------------------------------------------------------------------
+# slot KV cache
+# ---------------------------------------------------------------------------
+
+
+def test_slot_kv_cache_guards(smoke_model):
+    cfg, m, _ = smoke_model
+    sl = SlotKVCache(m, num_slots=2, cache_len=8)
+    assert list(sl.free_slots()) == [0, 1]
+    src = m.init_cache(1, 8)
+    sl.assign(0, "req", src, row=0, start=0, length=3)
+    assert list(sl.free_slots()) == [1]
+    with pytest.raises(ValueError):
+        sl.assign(0, "req2", src, row=0, start=0, length=1)
+    with pytest.raises(ValueError):
+        sl.assign(1, "req3", src, row=0, start=0, length=9)
+    sl.release(0)
+    assert list(sl.free_slots()) == [0, 1]
+
+    ssm_cfg = get_config("mamba2-370m", "smoke")
+    with pytest.raises(NotImplementedError):
+        SlotKVCache(Model(ssm_cfg), num_slots=2, cache_len=8)
+
+
+# ---------------------------------------------------------------------------
+# equivalence: packed prefill + slot decode == unpacked single-request decode
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_engine_matches_unpacked_decode(smoke_model):
+    """Greedy outputs from packed prefill + continuous slot decode must
+    exactly match single-request unpacked decoding — mixed lengths, more
+    requests than slots (forcing mid-decode admissions), varied budgets."""
+    cfg, m, params = smoke_model
+    rng = np.random.default_rng(1)
+    lengths = [3, 11, 25, 7, 16, 5]  # includes one > max_len (chunked solo)
+    budgets = [4, 2, 5, 3, 4, 6]
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in lengths]
+    eng = Engine(m, params, max_len=16, max_new_tokens=8, num_slots=2)
+    for rid, (p, b) in enumerate(zip(prompts, budgets)):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=b))
+    done = eng.run()
+    assert sorted(r.rid for r in done) == list(range(len(prompts)))
+    # 6 requests through 2 slots: admissions necessarily happen mid-decode
+    assert len(eng.stats) > 1
+    by_rid = {r.rid: r for r in done}
+    for rid, (p, b) in enumerate(zip(prompts, budgets)):
+        assert by_rid[rid].output == _reference_greedy(m, params, p, b), \
+            f"request {rid} diverged from unpacked decode"
+    ds = eng.decode_stats
+    assert ds["decoded_tokens"] == sum(b - 1 for b in budgets)
+    assert 0 < ds["slot_utilization"] <= 1
+
+
+def test_engine_zero_budget_emits_nothing(smoke_model):
+    cfg, m, params = smoke_model
+    eng = Engine(m, params, max_len=16, max_new_tokens=8, num_slots=2)
+    eng.submit(Request(rid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                       max_new_tokens=0))
+    done = eng.run()
+    assert len(done) == 1 and done[0].output == []
+
+
+def test_lockstep_fallback_serves_unsupported_stacks(smoke_model):
+    """Recurrent and short-ring-window stacks can't be lane-gathered:
+    Engine must fall back to lock-step decode and still serve (regression —
+    the slot rewrite initially raised at construction)."""
+    _, m_attn, params_attn = smoke_model
+    assert Engine(m_attn, params_attn, max_len=16).slots is not None
+
+    cfg = get_config("mamba2-370m", "smoke")
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    eng = Engine(m, params, max_len=16, max_new_tokens=3, num_slots=2)
+    assert eng.slots is None  # fallback mode
+    rng = np.random.default_rng(0)
+    for rid in range(3):
+        eng.submit(Request(rid=rid, prompt=rng.integers(
+            0, cfg.vocab_size, size=int(rng.integers(3, 12))).astype(
+                np.int32)))
+    done = eng.run()
+    assert len(done) == 3
+    assert all(len(r.output) == 3 for r in done)
+    assert eng.decode_stats["steps"] > 0
+
+
+def test_lockstep_fallback_matches_reference_on_windowed(smoke_model):
+    cfg = get_config("starcoder2-15b", "smoke")
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    prompt = np.asarray([5, 9, 2, 7, 1, 11, 3], np.int32)
+    eng = Engine(m, params, max_len=16, max_new_tokens=4, num_slots=2)
+    assert eng.slots is None  # window shorter than a lane -> fallback
+    eng.submit(Request(rid=0, prompt=prompt))
+    assert eng.run()[0].output == _reference_greedy(m, params, prompt, 4)
+
+
+def test_engine_honors_per_request_budgets_and_eos(smoke_model):
+    cfg, m, params = smoke_model
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (4, 9, 13)]
+    eng = Engine(m, params, max_len=16, max_new_tokens=8, num_slots=4)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=rid + 1))
+    done = eng.run()
+    by_rid = {r.rid: r for r in done}
+    for rid in range(3):
+        assert len(by_rid[rid].output) == rid + 1
+
+    # eos stops a request early, frees its slot for the next one
+    ref = _reference_greedy(m, params, prompts[1], 8)
+    eos = ref[2]
+    eng = Engine(m, params, max_len=16, max_new_tokens=8, num_slots=1,
+                 eos_id=eos)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p))
+    done = eng.run()
+    assert len(done) == 3
+    by_rid = {r.rid: r for r in done}
+    # stopped at the FIRST eos occurrence (greedy often repeats tokens)
+    assert by_rid[1].output == ref[:ref.index(eos) + 1]
+    assert all(len(r.output) <= 8 for r in done)
