@@ -4,10 +4,16 @@
 - smm: fused delta-decode + 6b dequant + densify + matmul ((X W_S) @ W_D),
   the SMM core analogue (dense-MXU trade, DESIGN §2).
 - afu: fused softmax (LUT exp) / layernorm+residual epilogues.
+- tda: length-predicated slot-decode attention over the serving KV cache
+  (TRF analogue: per-slot occupancy bounds skip dead kv blocks, int8 KV
+  dequantized in VMEM, online softmax with optional AFU LUT exp).
 
-All validated in interpret mode on CPU against their ref.py oracles; on TPU
-hardware set interpret=False.
+All validated in interpret mode on CPU against their ref.py oracles; the
+``interpret=None`` default (kernels/common.py) compiles them on TPU and
+interprets elsewhere.
 """
+from repro.kernels.common import pallas_interpret_default, resolve_interpret  # noqa: F401
 from repro.kernels.dmm.ops import lut_matmul  # noqa: F401
 from repro.kernels.smm.ops import compressed_matmul  # noqa: F401
 from repro.kernels.afu.ops import fused_layernorm_residual, fused_softmax  # noqa: F401
+from repro.kernels.tda.ops import block_stats, fused_decode_attention  # noqa: F401

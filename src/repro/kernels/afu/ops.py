@@ -1,14 +1,17 @@
 """Public AFU ops with padding wrappers."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
 from repro.kernels.afu.afu import layernorm_residual, softmax_lut
 from repro.kernels.afu.ref import exp_lut_table, softmax_lut_reference
+from repro.kernels.common import resolve_interpret
 
 
 def fused_softmax(x: jnp.ndarray, *, use_kernel: bool = True,
-                  interpret: bool = True) -> jnp.ndarray:
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
     """LUT-exp softmax over the last axis of an (..., C) array."""
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
@@ -20,11 +23,13 @@ def fused_softmax(x: jnp.ndarray, *, use_kernel: bool = True,
         if R % cand == 0:
             br = cand
             break
-    out = softmax_lut(x2, exp_lut_table(), block_rows=br, interpret=interpret)
+    out = softmax_lut(x2, exp_lut_table(), block_rows=br,
+                      interpret=resolve_interpret(interpret))
     return out.reshape(shape)
 
 
-def fused_layernorm_residual(x, res, scale, bias, *, interpret: bool = True):
+def fused_layernorm_residual(x, res, scale, bias, *,
+                             interpret: Optional[bool] = None):
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
     r2 = res.reshape(-1, shape[-1])
@@ -35,5 +40,5 @@ def fused_layernorm_residual(x, res, scale, bias, *, interpret: bool = True):
             br = cand
             break
     out = layernorm_residual(x2, r2, scale, bias, block_rows=br,
-                             interpret=interpret)
+                             interpret=resolve_interpret(interpret))
     return out.reshape(shape)

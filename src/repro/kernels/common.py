@@ -1,0 +1,44 @@
+"""Shared kernel plumbing: backend-aware execution defaults.
+
+Every kernel package (dmm/smm/afu/tda) exposes ``interpret`` on its public
+ops. Pallas kernels only compile to real hardware on TPU; on CPU (tests, CI)
+they must run in interpret mode. Callers used to hardcode
+``interpret=True`` — which silently de-optimizes TPU runs. The shared
+default is now *backend-aware*: ``interpret=None`` means "interpret unless
+we are on TPU", so the same call sites compile on hardware and stay
+testable on CPU. Passing an explicit bool always wins.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+__all__ = ["pallas_interpret_default", "resolve_interpret",
+           "resolve_decode_attn"]
+
+
+def pallas_interpret_default() -> bool:
+    """True unless running on a TPU backend (where kernels compile)."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` -> backend default; explicit bool passes through."""
+    if interpret is None:
+        return pallas_interpret_default()
+    return bool(interpret)
+
+
+def resolve_decode_attn(mode: str) -> str:
+    """Resolve a ``ModelConfig.decode_attn`` mode to a concrete impl.
+
+    ``auto`` picks the fused TDA kernel on TPU (where Pallas compiles and
+    block predication skips real work) and the dense jnp path elsewhere
+    (interpret-mode Pallas on CPU is strictly slower than one einsum).
+    """
+    if mode == "auto":
+        return "dense" if pallas_interpret_default() else "tda"
+    if mode not in ("dense", "tda"):
+        raise ValueError(f"unknown decode_attn mode {mode!r}")
+    return mode

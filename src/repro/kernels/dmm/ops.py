@@ -1,8 +1,11 @@
 """Public op: LUT-dequant matmul with padding/unpadding around the kernel."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
+from repro.kernels.common import resolve_interpret
 from repro.kernels.dmm.dmm import dmm_matmul
 from repro.kernels.dmm.ref import dmm_reference
 
@@ -18,7 +21,8 @@ def _pad_to(x, m, axis):
 
 def lut_matmul(x: jnp.ndarray, codes_packed: jnp.ndarray, lut: jnp.ndarray,
                *, bm: int = 256, bn: int = 256, bk: int = 512,
-               use_kernel: bool = True, interpret: bool = True) -> jnp.ndarray:
+               use_kernel: bool = True,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
     """y = x @ LUT[codes]; pads (M, N, K) up to tile multiples, then crops.
 
     ``use_kernel=False`` routes to the pure-jnp reference (the path the
@@ -31,5 +35,6 @@ def lut_matmul(x: jnp.ndarray, codes_packed: jnp.ndarray, lut: jnp.ndarray,
     bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
     xp = _pad_to(_pad_to(x, bm_, 0), bk_, 1)
     cp = _pad_to(_pad_to(codes_packed, bk_ // 2, 0), bn_, 1)
-    out = dmm_matmul(xp, cp, lut, bm=bm_, bn=bn_, bk=bk_, interpret=interpret)
+    out = dmm_matmul(xp, cp, lut, bm=bm_, bn=bn_, bk=bk_,
+                     interpret=resolve_interpret(interpret))
     return out[:M, :N]

@@ -2,8 +2,11 @@
 pair), with padding and a reference escape hatch."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
+from repro.kernels.common import resolve_interpret
 from repro.kernels.smm.ref import smm_reference
 from repro.kernels.smm.smm import smm_matmul
 
@@ -20,7 +23,7 @@ def _pad_to(x, m, axis):
 def compressed_matmul(y: jnp.ndarray, first: jnp.ndarray, deltas: jnp.ndarray,
                       vq: jnp.ndarray, scale, offset, *, bm: int = 256,
                       bn: int = 256, use_kernel: bool = True,
-                      interpret: bool = True) -> jnp.ndarray:
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
     """z = y @ densify(first, deltas, vq, scale, offset)."""
     scale = jnp.asarray(scale, jnp.float32)
     offset = jnp.asarray(offset, jnp.float32)
@@ -37,5 +40,5 @@ def compressed_matmul(y: jnp.ndarray, first: jnp.ndarray, deltas: jnp.ndarray,
     dp = _pad_to(deltas, bn_, 1)
     vp = _pad_to(vq, bn_, 1)
     out = smm_matmul(yp, fp, dp, vp, scale, offset, bm=bm_, bn=bn_,
-                     interpret=interpret)
+                     interpret=resolve_interpret(interpret))
     return out[:M, :N]

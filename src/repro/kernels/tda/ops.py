@@ -1,0 +1,72 @@
+"""Public TDA op: fused slot-decode attention with padding + bound prep.
+
+``fused_decode_attention`` is the serving-hot-path entry point: it accepts
+the exact tensors :func:`repro.models.layers.attention_block` holds at
+decode time — (B, 1, Hq, D) queries, the (possibly int8-quantized) KV lanes
+of a :class:`~repro.serve.kv_slots.SlotKVCache`, and per-slot depths — pads
+the cache axis to a block multiple (padding lands beyond every ``hi`` bound
+so the predicate never visits it), and runs the kernel.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.common import resolve_interpret
+from repro.kernels.tda.ref import block_stats, decode_attention_reference
+from repro.kernels.tda.tda import tda_decode_attention
+
+__all__ = ["fused_decode_attention", "block_stats"]
+
+
+def _pad_seq(x: Optional[jnp.ndarray], target: int) -> Optional[jnp.ndarray]:
+    if x is None or x.shape[1] == target:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[1] = (0, target - x.shape[1])
+    return jnp.pad(x, widths)
+
+
+def fused_decode_attention(
+    q: jnp.ndarray,  # (B, 1, Hq, D) or (B, Hq, D)
+    k: jnp.ndarray,  # (B, S, Hkv, D) fp, or int8 codes with k_scale
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,  # scalar or (B,): valid cache depth per slot
+    *,
+    k_scale: Optional[jnp.ndarray] = None,  # (B, S, Hkv)
+    v_scale: Optional[jnp.ndarray] = None,
+    window: Optional[int] = None,
+    lut_table: Optional[jnp.ndarray] = None,  # AFU exp LUT (else exact exp)
+    block_k: int = 128,
+    use_kernel: bool = True,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Length-predicated decode attention over slot KV lanes.
+
+    Valid positions per slot are ``[max(0, lengths - window), lengths)``
+    (``window=None`` -> ``[0, lengths)``). Slots with ``lengths <= 0``
+    return zeros. Output matches ``q``'s leading shape, dtype ``q.dtype``.
+    """
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    if not use_kernel:
+        out = decode_attention_reference(q, k, v, lengths, k_scale=k_scale,
+                                         v_scale=v_scale, window=window)
+        out = out.astype(q.dtype)
+        return out[:, None] if squeeze else out
+    B, Hq, D = q.shape
+    S = k.shape[1]
+    bk = min(block_k, max(S, 1))
+    Sp = ((S + bk - 1) // bk) * bk
+    k, v = _pad_seq(k, Sp), _pad_seq(v, Sp)
+    k_scale, v_scale = _pad_seq(k_scale, Sp), _pad_seq(v_scale, Sp)
+    hi = jnp.clip(jnp.broadcast_to(jnp.reshape(lengths, (-1,)), (B,)), 0, S)
+    lo = jnp.zeros_like(hi) if window is None \
+        else jnp.maximum(hi - window, 0)
+    bounds = jnp.stack([lo, hi], axis=1).astype(jnp.int32)
+    out = tda_decode_attention(
+        q, k, v, bounds, k_scale, v_scale, lut_table, block_k=bk,
+        interpret=resolve_interpret(interpret)).astype(q.dtype)
+    return out[:, None] if squeeze else out

@@ -1,0 +1,98 @@
+"""Pure-jnp oracle for the TDA (TRF decode-attention) kernel.
+
+Mirrors :func:`repro.models.layers.decode_attention` exactly — single query
+token per lane against a per-slot-depth KV cache — extended with the two
+things the fused kernel consumes natively:
+
+* int8 KV codes + per-(token, head) scales (the cache layout written by
+  ``kv_quant`` models) dequantized before attending, and
+* a ``window`` lower bound (``pos >= lengths - window``).
+
+Also hosts the host-side block accounting used by benchmarks and tests:
+``block_stats`` counts how many (slot, kv-block) grid steps the predicated
+kernel actually attends vs the dense ``B * ceil(S/bk)`` sweep.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+__all__ = ["decode_attention_reference", "block_stats"]
+
+
+def _dequant(codes: jnp.ndarray, scale: Optional[jnp.ndarray]) -> jnp.ndarray:
+    if scale is None:
+        return codes.astype(jnp.float32)
+    return codes.astype(jnp.float32) * scale[..., None]
+
+
+def decode_attention_reference(
+    q: jnp.ndarray,  # (B, Hq, D) or (B, 1, Hq, D)
+    k: jnp.ndarray,  # (B, S, Hkv, D) fp or int8 codes
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,  # scalar or (B,): valid positions are [lo, lengths)
+    *,
+    k_scale: Optional[jnp.ndarray] = None,  # (B, S, Hkv) when k is int8
+    v_scale: Optional[jnp.ndarray] = None,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Dense decode attention; softmax over every cache position, masked.
+
+    Rows with ``lengths <= 0`` return zeros (the fused kernel's convention
+    for never-attended lanes; the dense masked-softmax would return the mean
+    of v instead, which no caller wants).
+    """
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    B, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    kf = _dequant(k, k_scale)
+    vf = _dequant(v, v_scale)
+    qg = q.astype(jnp.float32).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, kf,
+                   preferred_element_type=jnp.float32) / np.sqrt(D)
+    pos = jnp.arange(S)
+    hi = jnp.reshape(lengths, (-1, 1))  # (1, 1) or (B, 1)
+    valid = pos[None, :] < hi
+    if window is not None:
+        valid &= pos[None, :] >= (hi - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, vf,
+                   preferred_element_type=jnp.float32)
+    o = jnp.where(jnp.reshape(lengths, (-1, 1)) > 0,
+                  o.reshape(B, Hq * D), 0.0).reshape(B, Hq, D)
+    if squeeze:
+        o = o[:, None]
+    return o
+
+
+def block_stats(lengths, cache_len: int, block_k: int,
+                *, window: Optional[int] = None,
+                batch: Optional[int] = None) -> Dict[str, float]:
+    """Predicated-grid work accounting (host-side, numpy).
+
+    ``visited`` counts (slot, kv-block) steps whose block range intersects
+    the slot's valid span ``[lo, hi)``; ``dense`` is the unpredicated
+    ``B * ceil(cache_len/bk)`` sweep the jnp reference performs. Their ratio
+    is the EMA/compute reduction the TRF path buys on this workload.
+    """
+    lens = np.atleast_1d(np.asarray(lengths, np.int64))
+    if batch is not None and lens.size == 1:
+        lens = np.full(batch, lens[0])
+    nk = -(-cache_len // block_k)
+    hi = np.clip(lens, 0, cache_len)
+    lo = np.zeros_like(hi) if window is None else np.maximum(hi - window, 0)
+    first = lo // block_k
+    last = -(-hi // block_k)  # ceil: one past the last visited block
+    visited = int(np.maximum(last - first, 0).sum())
+    dense = int(lens.size * nk)
+    return {"visited": visited, "dense": dense,
+            "ratio": visited / max(dense, 1)}

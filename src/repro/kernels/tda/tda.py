@@ -1,0 +1,157 @@
+"""TDA Pallas kernel: length-predicated slot-decode attention.
+
+One grid step = one (slot, kv-block) pair. Per-slot ``[lo, hi)`` bounds ride
+in SMEM; ``pl.when`` skips every block outside the slot's occupied span, so
+per-step work scales with actual cache occupancy instead of ``cache_len`` —
+the TRF/dynamic-batching analogue of AccelTran's sparsity-aware block
+skipping. Online-softmax state (m, l, o) lives in VMEM scratch carried
+across the kv-block grid dimension; K/V arrive as int8 codes +
+per-(token, head) scales and are dequantized in VMEM, so the dense fp cache
+never exists outside the chip. GQA queries are packed (Hkv, G, D) and both
+contractions are batched ``dot_general`` over the kv-head axis.
+
+The ``lut_table`` input (optional) routes the two exponentials through the
+AFU's 64-entry piecewise-linear exp — the same table
+:func:`repro.kernels.afu.ref.exp_lut_table` feeds the fused-softmax kernel —
+modelling the chip's LUT-assisted AFU on the decode path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.afu.ref import LUT_SIZE, lut_exp
+
+NEG_INF = -1e30
+
+__all__ = ["tda_decode_attention"]
+
+
+def _exp(x, table):
+    """exp(x) for x <= 0: exact, or the AFU's LUT piecewise-linear exp —
+    the very function the fused-softmax kernel models, so the two AFU
+    paths cannot drift apart."""
+    if table is None:
+        return jnp.exp(x)
+    return lut_exp(x, table)
+
+
+def _tda_kernel(bounds_ref, q_ref, k_ref, v_ref, *rest,
+                bk: int, groups: int, quant: bool, lut: bool):
+    rest = list(rest)
+    ks_ref = rest.pop(0) if quant else None
+    vs_ref = rest.pop(0) if quant else None
+    table = rest.pop(0)[...] if lut else None
+    o_ref, o_acc, m_acc, l_acc = rest
+
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_acc[...] = jnp.zeros_like(o_acc)
+        m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+        l_acc[...] = jnp.zeros_like(l_acc)
+
+    lo = bounds_ref[0, 0]
+    hi = bounds_ref[0, 1]
+    blk0 = ki * bk
+
+    # Predication: a block is visited only if it intersects the slot's
+    # occupied span [lo, hi). Skipped blocks cost a grid step, not FLOPs or
+    # VMEM traffic — decode work follows occupancy, not cache_len.
+    @pl.when((blk0 < hi) & (blk0 + bk > lo))
+    def _attend():
+        q = q_ref[0].astype(jnp.float32)          # (Hq, D)
+        k = k_ref[0].astype(jnp.float32)          # (bk, Hkv, D)
+        v = v_ref[0].astype(jnp.float32)
+        if quant:  # in-VMEM dequant: codes * per-(token, head) scale
+            k = k * ks_ref[0][..., None]
+            v = v * vs_ref[0][..., None]
+        Hq, D = q.shape
+        Hkv = k.shape[1]
+        qg = q.reshape(Hkv, groups, D)
+        # scores (Hkv, G, bk): batch over kv heads, contract head_dim
+        s = jax.lax.dot_general(
+            qg, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32) * (1.0 / np.sqrt(D))
+        pos = blk0 + jax.lax.iota(jnp.int32, bk)
+        valid = (pos >= lo) & (pos < hi)
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        m_prev = m_acc[...].reshape(Hkv, groups)
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = _exp(s - m_new[..., None], table)
+        p = jnp.where(valid[None, None, :], p, 0.0)
+        alpha = _exp(m_prev - m_new, table)
+        l_acc[...] = (l_acc[...].reshape(Hkv, groups) * alpha
+                      + p.sum(-1)).reshape(Hq, 1)
+        # P@V (Hkv, G, D): contract the block axis, batch over kv heads
+        pv = jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)
+        o_acc[...] = (o_acc[...].reshape(Hkv, groups, D) * alpha[..., None]
+                      + pv).reshape(Hq, D)
+        m_acc[...] = m_new.reshape(Hq, 1)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        # Never-attended lanes (hi <= lo) keep l == 0 -> output zeros.
+        o_ref[0] = (o_acc[...] /
+                    jnp.maximum(l_acc[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def tda_decode_attention(q, k, v, bounds, k_scale=None, v_scale=None,
+                         lut_table=None, *, block_k: int = 128,
+                         interpret: bool = True) -> jnp.ndarray:
+    """Fused slot-decode attention.
+
+    q (B, Hq, D); k/v (B, S, Hkv, D) fp or int8 codes (then
+    ``k_scale``/``v_scale`` (B, S, Hkv) must be given); bounds (B, 2) int32
+    per-slot ``[lo, hi)`` valid spans; ``S % block_k == 0``. Returns
+    (B, Hq, D) f32.
+    """
+    B, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    assert S % block_k == 0, (S, block_k)
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    quant = k_scale is not None
+    lut = lut_table is not None
+    nk = S // block_k
+
+    in_specs = [
+        pl.BlockSpec((1, 2), lambda b, kb: (b, 0), memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, Hq, D), lambda b, kb: (b, 0, 0)),
+        pl.BlockSpec((1, block_k, Hkv, D), lambda b, kb: (b, kb, 0, 0)),
+        pl.BlockSpec((1, block_k, Hkv, D), lambda b, kb: (b, kb, 0, 0)),
+    ]
+    args = [bounds, q, k, v]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, block_k, Hkv), lambda b, kb: (b, kb, 0)),
+            pl.BlockSpec((1, block_k, Hkv), lambda b, kb: (b, kb, 0)),
+        ]
+        args += [k_scale, v_scale]
+    if lut:
+        in_specs.append(pl.BlockSpec((LUT_SIZE,), lambda b, kb: (0,)))
+        args.append(lut_table)
+
+    return pl.pallas_call(
+        functools.partial(_tda_kernel, bk=block_k, groups=Hq // Hkv,
+                          quant=quant, lut=lut),
+        grid=(B, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, Hq, D), lambda b, kb: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((Hq, D), jnp.float32),  # o accumulator
+            pltpu.VMEM((Hq, 1), jnp.float32),  # running max
+            pltpu.VMEM((Hq, 1), jnp.float32),  # running denominator
+        ],
+        interpret=interpret,
+    )(*args)

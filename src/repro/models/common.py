@@ -97,6 +97,14 @@ class ModelConfig:
     # int8 KV cache with per-(token, head) scales (KIVI-lite): halves the
     # decode memory wall and the cache footprint on MHA archs.
     kv_quant: bool = False
+    # Decode-attention impl: "dense" (jnp masked softmax over the whole
+    # cache), "tda" (fused Pallas kernel — per-slot length predication,
+    # in-VMEM int8 dequant, online softmax), or "auto" (tda on TPU, dense
+    # elsewhere; resolved by repro.kernels.common.resolve_decode_attn).
+    decode_attn: str = "dense"
+    # KV-block size of the fused decode kernel's predication grid (also the
+    # granularity of the blocks-visited accounting in serve/benchmarks).
+    decode_block_k: int = 128
     # Causal wedge: static triangle decomposition of the flash loops — visit
     # only ~half the (q, kv) chunk grid instead of masking it (§Perf).
     causal_wedge: bool = False

@@ -29,6 +29,8 @@ from repro.core.factorized import (
     apply_linear,
     init_linear,
 )
+from repro.kernels.common import resolve_decode_attn
+from repro.kernels.tda.ops import fused_decode_attention
 from repro.models.common import ModelConfig
 
 NEG_INF = -1e30
@@ -297,20 +299,53 @@ def flash_attention(
     return out[:, :Sq0].astype(q.dtype)
 
 
+def kv_quantize(t: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(..., S, H, D) -> int8 codes + per-(token, head) f32 scales — THE
+    serving KV-cache layout (prefill writer, decode writer, TDA kernel,
+    benchmarks and tests all share this one definition)."""
+    amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) + 1e-6
+    scale = (amax / 127.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def kv_dequantize(q: jnp.ndarray, scale: jnp.ndarray,
+                  dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
 def decode_attention(
     q: jnp.ndarray,  # (B, 1, Hq, D)
-    k_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    k_cache: jnp.ndarray,  # (B, S, Hkv, D) fp — or int8 codes with k_scale
     v_cache: jnp.ndarray,
     cache_index: jnp.ndarray,  # scalar or (B,) int32: valid cache slots
     *,
     window: Optional[int] = None,
+    k_scale: Optional[jnp.ndarray] = None,  # (B, S, Hkv): int8 KV scales
+    v_scale: Optional[jnp.ndarray] = None,
+    impl: str = "dense",
+    block_k: int = 128,
 ) -> jnp.ndarray:
     """Single-token attention against a (possibly ring-buffered) KV cache.
 
     ``cache_index`` may be a scalar (every row at the same depth — the
     lock-step serve path) or a ``(B,)`` vector (slot-based continuous
     batching: each row is an independent request at its own depth).
+
+    ``impl="tda"`` dispatches to the fused Pallas kernel
+    (:mod:`repro.kernels.tda`): per-slot length predication skips dead kv
+    blocks and int8 codes (``k_scale``/``v_scale`` given) dequantize in
+    VMEM. ``impl="dense"`` is this jnp path — with scales it dequantizes
+    the whole cache first, which the kernel exists to avoid.
     """
+    if impl == "tda":
+        return fused_decode_attention(
+            q, k_cache, v_cache, cache_index, k_scale=k_scale,
+            v_scale=v_scale, window=window, block_k=block_k)
+    if k_scale is not None:
+        k_cache = k_cache.astype(jnp.float32) * k_scale[..., None]
+        v_cache = v_cache.astype(jnp.float32) * v_scale[..., None]
     B, S, Hkv, D = k_cache.shape
     Hq = q.shape[2]
     G = Hq // Hkv
@@ -409,17 +444,6 @@ def attention_block(
             return buf
         return jax.lax.dynamic_index_in_dim(buf, layer_idx, 0, keepdims=False)
 
-    def kv_quantize(t):
-        """(B, S', H, D) -> int8 codes + per-(token, head) scales."""
-        amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) + 1e-6
-        scale = (amax / 127.0).astype(jnp.float32)
-        q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
-                     -127, 127).astype(jnp.int8)
-        return q, scale
-
-    def kv_dequantize(q, scale):
-        return (q.astype(jnp.float32) * scale[..., None]).astype(dt)
-
     new_cache = None
     ring = cache["k"].shape[-3] if cache is not None else 0
     quant = cache is not None and "k_scale" in cache
@@ -447,6 +471,14 @@ def attention_block(
             return jax.lax.dynamic_update_slice(
                 buf, lv[None], (layer_idx,) + (0,) * lv.ndim)
 
+        impl = resolve_decode_attn(cfg.decode_attn)
+        # Inactive serving slots attend nothing: zero their valid span so
+        # the predicated kernel skips every block of a dead lane (their
+        # outputs are discarded by the engine either way).
+        if slot_mask is not None:
+            cache_index = jnp.where(jnp.reshape(slot_mask, (-1,)),
+                                    cache_index, -1)
+        kcs = vcs = None
         if quant:
             kq, ks = kv_quantize(k)
             vq, vs = kv_quantize(v)
@@ -454,21 +486,33 @@ def attention_block(
                          "v": slot_write_nd(cache["v"], vq),
                          "k_scale": slot_write_nd(cache["k_scale"], ks),
                          "v_scale": slot_write_nd(cache["v_scale"], vs)}
-            kc = kv_dequantize(layer_view(new_cache["k"]),
-                               layer_view(new_cache["k_scale"]))
-            vc = kv_dequantize(layer_view(new_cache["v"]),
-                               layer_view(new_cache["v_scale"]))
+            if impl == "tda":
+                # The fused kernel consumes the codes + scales directly and
+                # dequantizes per block in VMEM — the dense fp cache below
+                # never materializes on this path.
+                kc = layer_view(new_cache["k"])
+                vc = layer_view(new_cache["v"])
+                kcs = layer_view(new_cache["k_scale"])
+                vcs = layer_view(new_cache["v_scale"])
+            else:
+                kc = kv_dequantize(layer_view(new_cache["k"]),
+                                   layer_view(new_cache["k_scale"]), dt)
+                vc = kv_dequantize(layer_view(new_cache["v"]),
+                                   layer_view(new_cache["v_scale"]), dt)
         else:
             kc_all = slot_write_nd(cache["k"], k)
             vc_all = slot_write_nd(cache["v"], v)
             new_cache = {"k": kc_all, "v": vc_all}
             kc, vc = layer_view(kc_all), layer_view(vc_all)
         if window is None:
-            o = decode_attention(q, kc, vc, cache_index + 1)
+            o = decode_attention(q, kc, vc, cache_index + 1,
+                                 k_scale=kcs, v_scale=vcs, impl=impl,
+                                 block_k=cfg.decode_block_k)
         else:
             # Ring buffer: all slots < min(cache_index+1, ring) are valid.
             o = decode_attention(q, kc, vc, jnp.minimum(cache_index + 1, ring),
-                                 window=None)
+                                 window=None, k_scale=kcs, v_scale=vcs,
+                                 impl=impl, block_k=cfg.decode_block_k)
         o = o.reshape(B, S, cfg.n_heads * hd)
     else:
         if cache is not None:  # prefill writing the cache

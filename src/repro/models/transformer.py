@@ -13,6 +13,7 @@ loop, while per-layer sparse W_D factors stream through it.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict, Optional, Tuple
 
@@ -47,6 +48,19 @@ def factorization_regularizer(params: Dict, fcfg: FactorizationConfig) -> jnp.nd
 class Model:
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
+
+    def with_decode_attn(self, mode: str,
+                         block_k: Optional[int] = None) -> "Model":
+        """Same model, different decode-attention impl (``dense``/``tda``/
+        ``auto``) and optional predication-block size. Params and caches
+        are layout-compatible across modes — only the S==1 attention math
+        changes — so the serving engine can run prefill on ``self`` and
+        decode on the returned model."""
+        block_k = block_k or self.cfg.decode_block_k
+        if mode == self.cfg.decode_attn and block_k == self.cfg.decode_block_k:
+            return self
+        return Model(dataclasses.replace(self.cfg, decode_attn=mode,
+                                         decode_block_k=block_k))
 
     # ------------------------------------------------------------------
     # init

@@ -35,6 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.common import resolve_decode_attn
+from repro.kernels.tda.ref import block_stats
 from repro.models.transformer import Model
 from repro.serve.kv_slots import SlotKVCache
 from repro.serve.scheduler import Admission, Request, Scheduler
@@ -46,7 +48,9 @@ class Engine:
     def __init__(self, model: Model, params, max_len: int = 128,
                  max_new_tokens: int = 16, mesh=None, num_slots: int = 8,
                  max_prompt_len: Optional[int] = None,
-                 eos_id: Optional[int] = None, max_rows: int = 8):
+                 eos_id: Optional[int] = None, max_rows: int = 8,
+                 decode_attn: str = "auto",
+                 decode_block_k: Optional[int] = None):
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -73,6 +77,14 @@ class Engine:
         # SSD's chunked scan needs prefill widths that are chunk multiples.
         self._ssd_chunk = model.cfg.ssm.chunk \
             if "ssd" in kinds and model.cfg.ssm else None
+        # Decode-attention impl on the jitted hot path: "auto" compiles the
+        # fused TDA kernel on TPU and keeps the dense jnp path elsewhere
+        # (interpret-mode Pallas on CPU would lose to one einsum). Prefill
+        # always runs on the original model — flash attention is unaffected.
+        self.decode_attn = resolve_decode_attn(decode_attn) \
+            if kinds & {"attn", "local"} else "dense"
+        dmodel = model.with_decode_attn(self.decode_attn, decode_block_k)
+        self._block_k = min(dmodel.cfg.decode_block_k, self.cache_len)
         self.stats: List[Dict] = []  # one entry per prefill sweep
         self.decode_stats: Dict = {}
 
@@ -85,7 +97,7 @@ class Engine:
             return logits, new_caches
 
         def decode_fn(params, tokens, caches, lengths, active):
-            logits, new_caches = model.decode_step(
+            logits, new_caches = dmodel.decode_step(
                 params, {"inputs": tokens}, caches, lengths,
                 slot_mask=active, mesh=mesh)
             nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
@@ -103,7 +115,7 @@ class Engine:
             return logits, new_caches
 
         def lockstep_decode_fn(params, tokens, caches, idx):
-            logits, new_caches = model.decode_step(
+            logits, new_caches = dmodel.decode_step(
                 params, {"inputs": tokens}, caches, idx, mesh=mesh)
             return (jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32),
                     new_caches)
@@ -138,6 +150,8 @@ class Engine:
         steps = 0
         active_slot_steps = 0
         decoded_tokens = 0
+        blocks_visited = 0
+        blocks_dense = 0
 
         while self.scheduler.pending() or sl.active.any():
             if self.scheduler.pending():
@@ -147,6 +161,14 @@ class Engine:
             active_ix = np.flatnonzero(sl.active)
             if active_ix.size == 0:
                 continue  # everything admitted finished at prefill
+
+            # Predicated-kernel work accounting: the TDA grid visits only
+            # the kv blocks covering each active lane's occupancy (+1 for
+            # the token being written); dense is the full slot-table sweep.
+            bs = block_stats(np.where(sl.active, sl.lengths + 1, 0),
+                             self.cache_len, self._block_k)
+            blocks_visited += bs["visited"]
+            blocks_dense += bs["dense"]
 
             nxt, sl.caches = self._decode(
                 self.params, jnp.asarray(cur[:, None]), sl.caches,
@@ -171,6 +193,9 @@ class Engine:
             "decoded_tokens": decoded_tokens,
             "slot_utilization": (active_slot_steps
                                  / max(steps * self.num_slots, 1)),
+            "kv_blocks_visited": blocks_visited,
+            "kv_blocks_dense": blocks_dense,
+            "kv_block_ratio": blocks_visited / max(blocks_dense, 1),
         }
         return done
 
@@ -184,6 +209,7 @@ class Engine:
         for adm in groups:
             logits, caches, slots_of = self._prefill_admission(adm)
             logits = np.asarray(logits)
+            assigns = []  # whole group lands in ONE fused lane copy
             for i, req in enumerate(adm.requests):
                 row, start, length = slots_of[i]
                 req_budget = min(req.max_new_tokens, self.max_new)
@@ -197,10 +223,11 @@ class Engine:
                     continue
                 slot = int(free[fi])
                 fi += 1
-                self.slots.assign(slot, req, caches, row, start, length)
+                assigns.append((slot, req, row, start, length))
                 cur[slot] = first
                 emitted[slot] = 1
                 budget[slot] = req_budget
+            self.slots.assign_many(assigns, caches)
 
     def _prefill_admission(self, adm: Admission):
         """Run one prefill sweep; returns (all-position logits, filled

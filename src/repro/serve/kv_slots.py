@@ -6,10 +6,11 @@ fixed-shape model cache (batch dim = slots), so the engine's decode step is a
 single jitted call over *all* slots regardless of which requests occupy them.
 Request lifecycles only touch host-side metadata plus a lane copy:
 
-* ``assign`` gathers a request's KV segment out of a (packed or solo)
-  prefill cache — rows of a packed prefill interleave several requests, and
-  ``request_slots`` says where each one's tokens landed — and writes it into
-  a free lane at positions ``[0, len)``.
+* ``assign`` / ``assign_many`` gather request KV segments out of a (packed
+  or solo) prefill cache — rows of a packed prefill interleave several
+  requests, and ``request_slots`` says where each one's tokens landed — and
+  write them into free lanes at positions ``[0, len)``; a whole admission
+  round is one fused per-leaf gather + scatter, not a per-slot loop.
 * ``release`` just flips the host-side ``active`` bit; the stale lane is
   masked out of the decode step via ``slot_mask`` and overwritten by the
   next ``assign``.
@@ -20,7 +21,7 @@ sweep.
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +30,9 @@ import numpy as np
 from repro.models.transformer import Model
 
 __all__ = ["SlotKVCache"]
+
+# (slot, request, row, start, length) — one admitted request's lane copy.
+Assignment = Tuple[int, Any, int, int, int]
 
 
 class SlotKVCache:
@@ -77,31 +81,40 @@ class SlotKVCache:
     def utilization(self) -> float:
         return float(self.active.mean())
 
-    def _copy_lane(self, dst_caches, src_caches, slot, row, start, length):
-        """Write ``src[row, start:start+length]`` into lane ``slot`` at
-        ``[0:length]`` (remainder zeroed — decode masks positions >= length
-        anyway). Static shapes throughout: the lane is gathered with clipped
-        indices and merged via a one-hot select over slots, so one jit
-        covers every (slot, row, start, length) for a given source width."""
+    def _copy_lane(self, dst_caches, src_caches, slots, rows, starts,
+                   lengths):
+        """Write ``src[rows[j], starts[j]:starts[j]+lengths[j]]`` into lane
+        ``slots[j]`` at ``[0:lengths[j]]`` for every j at once (remainder
+        zeroed — decode masks positions >= length anyway). One fused gather
+        per cache leaf: all J source rows come out in a single ``jnp.take``,
+        their segments in a single clipped ``take_along_axis``, and the lanes
+        land via one scatter on the slot axis — no per-slot Python loop, no
+        O(num_slots) one-hot select. Static shapes throughout, so one jit
+        covers every admission round of a given size and source width."""
         ba = 1 if self._stacked else 0  # batch axis of every cache leaf
-        seq_pos = start + jnp.arange(self.cache_len)
-        valid = jnp.arange(self.cache_len) < length
-        hot = jnp.arange(self.num_slots) == slot
+        J = slots.shape[0]
+        # (J, cache_len) source positions, clipped per leaf to its width
+        seq_pos = starts[:, None] + jnp.arange(self.cache_len)[None, :]
+        valid = jnp.arange(self.cache_len)[None, :] < lengths[:, None]
 
         def per_leaf(dst, src):
             w = src.shape[ba + 1]
-            src_row = jax.lax.dynamic_index_in_dim(src, row, axis=ba,
-                                                   keepdims=False)
-            gathered = jnp.take(src_row, jnp.clip(seq_pos, 0, w - 1),
-                                axis=ba)
-            vshape = (1,) * ba + (self.cache_len,) + \
-                (1,) * (gathered.ndim - ba - 1)
-            lane = jnp.where(valid.reshape(vshape), gathered,
-                             0).astype(dst.dtype)
-            hshape = (1,) * ba + (self.num_slots, 1) + \
-                (1,) * (dst.ndim - ba - 2)
-            return jnp.where(hot.reshape(hshape),
-                             jnp.expand_dims(lane, ba), dst)
+            sel = jnp.take(src, rows, axis=ba)  # (L?, J, w, ...)
+            idx = jnp.clip(seq_pos, 0, w - 1)
+            ishape = (1,) * ba + (J, self.cache_len) + \
+                (1,) * (sel.ndim - ba - 2)
+            lanes = jnp.take_along_axis(sel, idx.reshape(ishape),
+                                        axis=ba + 1)  # (L?, J, cache_len, .)
+            vshape = (1,) * ba + (J, self.cache_len) + \
+                (1,) * (lanes.ndim - ba - 2)
+            lanes = jnp.where(valid.reshape(vshape), lanes,
+                              0).astype(dst.dtype)
+            # Padding entries carry slot == num_slots: out-of-bounds
+            # scatter updates are dropped (JAX default), so they cost
+            # nothing and real slots stay unique.
+            if ba == 0:
+                return dst.at[slots].set(lanes)
+            return dst.at[:, slots].set(lanes)
 
         return jax.tree.map(per_leaf, dst_caches, src_caches)
 
@@ -109,23 +122,49 @@ class SlotKVCache:
                length: int) -> None:
         """Claim ``slot`` for ``request``; copy its KV segment
         ``src_caches[row, start:start+length]`` into the lane at ``[0:length]``.
-
-        ``src_caches`` is the cache filled by a prefill over packed rows (or
-        a solo row); segment masking made each request's K/V identical to an
-        unpacked computation, so the gathered lane decodes exactly as if the
-        request had been prefilled alone.
         """
-        if self.active[slot]:
-            raise ValueError(f"slot {slot} is already occupied")
-        if length > self.cache_len:
-            raise ValueError(
-                f"request length {length} exceeds cache_len {self.cache_len}")
-        self.caches = self._copy(self.caches, src_caches, jnp.int32(slot),
-                                 jnp.int32(row), jnp.int32(start),
-                                 jnp.int32(length))
-        self.active[slot] = True
-        self.lengths[slot] = length
-        self.request[slot] = request
+        self.assign_many([(slot, request, row, start, length)], src_caches)
+
+    def assign_many(self, assignments: Sequence[Assignment],
+                    src_caches) -> None:
+        """Claim several slots in one fused lane copy.
+
+        ``assignments`` is a list of ``(slot, request, row, start, length)``
+        drawn from ONE prefill's ``src_caches`` — rows of a packed prefill
+        interleave several requests, and segment masking made each one's
+        K/V identical to an unpacked computation, so the gathered lanes
+        decode exactly as if each request had been prefilled alone. The
+        whole admission round is a single jitted gather+scatter instead of
+        one dispatch per request.
+        """
+        if not assignments:
+            return
+        for slot, _, _, _, length in assignments:
+            if self.active[slot]:
+                raise ValueError(f"slot {slot} is already occupied")
+            if length > self.cache_len:
+                raise ValueError(
+                    f"request length {length} exceeds cache_len "
+                    f"{self.cache_len}")
+        slots = [a[0] for a in assignments]
+        if len(set(slots)) != len(slots):
+            raise ValueError(f"duplicate slots in one admission: {slots}")
+        # Pad the round to a power of two: bounds jit variants of the fused
+        # copy to log2(num_slots)+1 per source width (same idiom as the
+        # engine's packed-prefill row padding). Padding entries scatter to
+        # the out-of-bounds sentinel slot and are dropped.
+        J = 1 << (len(assignments) - 1).bit_length()
+        pad = J - len(assignments)
+        self.caches = self._copy(
+            self.caches, src_caches,
+            jnp.asarray(slots + [self.num_slots] * pad, jnp.int32),
+            jnp.asarray([a[2] for a in assignments] + [0] * pad, jnp.int32),
+            jnp.asarray([a[3] for a in assignments] + [0] * pad, jnp.int32),
+            jnp.asarray([a[4] for a in assignments] + [0] * pad, jnp.int32))
+        for slot, request, _, _, length in assignments:
+            self.active[slot] = True
+            self.lengths[slot] = length
+            self.request[slot] = request
 
     def advance(self, slot: int) -> None:
         """One decoded token was written into the lane at ``lengths[slot]``."""
@@ -133,4 +172,7 @@ class SlotKVCache:
 
     def release(self, slot: int) -> None:
         self.active[slot] = False
+        # Zero the depth so the decode step's predicated attention (and the
+        # blocks-visited accounting) see an empty lane, not a stale one.
+        self.lengths[slot] = 0
         self.request[slot] = None

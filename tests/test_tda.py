@@ -1,0 +1,219 @@
+"""TDA fused slot-decode attention vs its jnp oracles.
+
+Equivalence sweeps cover GQA ratios, per-slot depths, masked (inactive)
+slots, windowed caches, and int8-quantized KV; the property tests pin down
+that predication (block size, cache padding) changes the *work*, never the
+result. The dispatch tests exercise the serving wiring:
+``layers.decode_attention(impl="tda")`` and a continuous Engine decoding
+through the kernel must match the dense path token-for-token.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.kernels.afu.ref import exp_lut_table
+from repro.kernels.tda.ops import block_stats, fused_decode_attention
+from repro.kernels.tda.ref import decode_attention_reference
+from repro.models import layers as L
+
+RNG = np.random.default_rng(0)
+
+
+def _mk(B, S, Hq, Hkv, D, quant=False):
+    q = jnp.asarray(RNG.normal(size=(B, Hq, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, Hkv, D)), jnp.float32)
+    if not quant:
+        return q, k, v, None, None
+    kq, ks = L.kv_quantize(k)  # the real serving cache layout
+    vq, vs = L.kv_quantize(v)
+    return q, kq, vq, ks, vs
+
+
+# ---- equivalence sweeps ---------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,bk", [
+    (2, 32, 4, 4, 16, 16),    # MHA
+    (4, 48, 8, 2, 16, 16),    # GQA 4:1
+    (3, 40, 6, 1, 8, 16),     # MQA, padding path (40 % 16 != 0)
+    (8, 33, 4, 2, 32, 8),     # odd cache width
+    (2, 16, 4, 2, 16, 64),    # block larger than cache -> single block
+])
+@pytest.mark.parametrize("quant", [False, True])
+def test_tda_matches_ref(B, S, Hq, Hkv, D, bk, quant):
+    q, k, v, ks, vs = _mk(B, S, Hq, Hkv, D, quant)
+    lengths = jnp.asarray(RNG.integers(1, S + 1, size=B), jnp.int32)
+    out = fused_decode_attention(q, k, v, lengths, k_scale=ks, v_scale=vs,
+                                 block_k=bk)
+    ref = decode_attention_reference(q, k, v, lengths, k_scale=ks,
+                                     v_scale=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_tda_scalar_length_and_4d_query():
+    q, k, v, _, _ = _mk(3, 32, 4, 2, 16)
+    out = fused_decode_attention(q[:, None], k, v, jnp.int32(20), block_k=8)
+    ref = decode_attention_reference(q, k, v, jnp.int32(20))
+    assert out.shape == (3, 1, 4, 16)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_tda_masked_slots_output_zero():
+    """Inactive lanes (length 0) must come back all-zero, not softmax(0)."""
+    q, k, v, _, _ = _mk(4, 32, 4, 2, 16)
+    lengths = jnp.asarray([5, 0, 32, 0], jnp.int32)
+    out = fused_decode_attention(q, k, v, lengths, block_k=16)
+    ref = decode_attention_reference(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    assert np.all(np.asarray(out)[[1, 3]] == 0.0)
+    assert np.all(np.abs(np.asarray(out)[[0, 2]]).max((-1, -2)) > 0)
+
+
+@pytest.mark.parametrize("window", [4, 16, 100])
+def test_tda_windowed(window):
+    q, k, v, _, _ = _mk(4, 48, 4, 2, 16)
+    lengths = jnp.asarray([3, 17, 48, 30], jnp.int32)
+    out = fused_decode_attention(q, k, v, lengths, window=window, block_k=16)
+    ref = decode_attention_reference(q, k, v, lengths, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_tda_lut_exp_close_to_exact():
+    """AFU LUT-exp option: within the 64-entry interpolation bound."""
+    q, k, v, _, _ = _mk(4, 32, 4, 2, 16)
+    lengths = jnp.asarray([5, 17, 32, 9], jnp.int32)
+    exact = fused_decode_attention(q, k, v, lengths, block_k=16)
+    lut = fused_decode_attention(q, k, v, lengths, block_k=16,
+                                 lut_table=exp_lut_table())
+    assert float(jnp.abs(lut - exact).max()) < 2e-2
+    assert bool(jnp.all(jnp.isfinite(lut)))
+
+
+# ---- property: predication changes work, never results --------------------
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=8, deadline=None)
+def test_tda_block_size_invariance(seed):
+    rng = np.random.default_rng(seed)
+    B, S, Hq, Hkv, D = 3, 40, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    lengths = jnp.asarray(rng.integers(0, S + 1, size=B), jnp.int32)
+    outs = [fused_decode_attention(q, k, v, lengths, block_k=bk)
+            for bk in (5, 8, 16, 40, 128)]
+    for o in outs[1:]:  # different grids, different visited sets — same math
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=5, deadline=None)
+def test_tda_cache_padding_invariance(seed):
+    """Growing the cache (dead tail past every length) adds skipped blocks
+    but cannot change any output value."""
+    rng = np.random.default_rng(seed)
+    B, S, Hq, Hkv, D = 2, 24, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, Hq, D)), jnp.float32)
+    k = rng.normal(size=(B, S, Hkv, D)).astype(np.float32)
+    v = rng.normal(size=(B, S, Hkv, D)).astype(np.float32)
+    lengths = jnp.asarray(rng.integers(1, S + 1, size=B), jnp.int32)
+    pad = ((0, 0), (0, 40), (0, 0), (0, 0))
+    out = fused_decode_attention(q, jnp.asarray(k), jnp.asarray(v), lengths,
+                                 block_k=8)
+    big = fused_decode_attention(q, jnp.asarray(np.pad(k, pad)),
+                                 jnp.asarray(np.pad(v, pad)), lengths,
+                                 block_k=8)
+    np.testing.assert_allclose(np.asarray(big), np.asarray(out),
+                               rtol=1e-5, atol=1e-5)
+    s1 = block_stats(np.asarray(lengths), S, 8)
+    s2 = block_stats(np.asarray(lengths), S + 40, 8)
+    assert s1["visited"] == s2["visited"]  # dead tail is never visited
+    assert s2["dense"] > s1["dense"]
+
+
+def test_block_stats_accounting():
+    assert block_stats([8], 64, 8) == {"visited": 1, "dense": 8,
+                                       "ratio": 1 / 8}
+    assert block_stats([64, 64], 64, 8)["ratio"] == 1.0
+    assert block_stats([0, 0], 64, 8)["visited"] == 0
+    w = block_stats([64], 64, 8, window=8)
+    assert w["visited"] == 1  # only the last block falls in the window
+    assert block_stats(17, 64, 8, batch=4)["visited"] == 4 * 3
+
+
+# ---- serving wiring -------------------------------------------------------
+
+
+def test_layers_dispatch_matches_dense():
+    """decode_attention(impl='tda') == impl='dense' on fp and int8 caches."""
+    B, S, Hq, Hkv, D = 4, 32, 4, 2, 16
+    q4 = jnp.asarray(RNG.normal(size=(B, 1, Hq, D)), jnp.float32)
+    _, k, v, ks, vs = _mk(B, S, Hq, Hkv, D, quant=True)
+    idx = jnp.asarray([1, 7, 32, 15], jnp.int32)
+    dense = L.decode_attention(q4, k, v, idx, k_scale=ks, v_scale=vs,
+                               impl="dense")
+    fused = L.decode_attention(q4, k, v, idx, k_scale=ks, v_scale=vs,
+                               impl="tda", block_k=16)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+    _, kf, vf, _, _ = _mk(B, S, Hq, Hkv, D)
+    dense = L.decode_attention(q4, kf, vf, idx, window=8)
+    fused = L.decode_attention(q4, kf, vf, idx, window=8, impl="tda",
+                               block_k=16)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kv_quant", [False, True])
+def test_engine_tda_decode_matches_dense(kv_quant):
+    """Continuous engine decoding through the fused kernel emits the same
+    tokens as the dense path — mixed lengths, mid-decode admissions."""
+    from repro.configs import get_config
+    from repro.models.transformer import Model
+    from repro.serve import Engine, Request
+
+    cfg = get_config("qwen2.5-32b", "smoke", kv_quant=kv_quant)
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (3, 11, 7)]
+
+    def run(mode):
+        eng = Engine(m, params, max_len=16, max_new_tokens=4, num_slots=2,
+                     decode_attn=mode, decode_block_k=16)
+        assert eng.decode_attn == mode
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid=rid, prompt=p))
+        outs = {r.rid: r.output for r in eng.run()}
+        return outs, eng.decode_stats
+
+    dense_out, dense_stats = run("dense")
+    tda_out, tda_stats = run("tda")
+    assert tda_out == dense_out
+    assert all(len(o) == 4 for o in tda_out.values())
+    # predicated work strictly below the dense sweep on this workload
+    assert 0 < tda_stats["kv_block_ratio"] < 0.7
+    assert tda_stats["kv_blocks_visited"] == dense_stats["kv_blocks_visited"]
+
+
+def test_engine_auto_resolves_by_backend():
+    from repro.configs import get_config
+    from repro.kernels.common import resolve_decode_attn
+    from repro.models.transformer import Model
+    from repro.serve import Engine
+
+    cfg = get_config("qwen2.5-32b", "smoke")
+    eng = Engine(Model(cfg), params=None, max_len=16, num_slots=2)
+    assert eng.decode_attn == resolve_decode_attn("auto")
+    if jax.default_backend() == "cpu":
+        assert eng.decode_attn == "dense"  # interpret Pallas never on hot path
