@@ -267,6 +267,50 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
     blk_ratio = eng.decode_stats["kv_block_ratio"]
 
     speedup = (useful / ct_s) / (useful / ls_s)
+
+    # ---- the other two cache kinds through the same slot engine: a pure
+    # recurrent stack (SSD state lanes — no kv blocks at all) and a
+    # short-sliding-window stack (ring lanes). Both used to fall back to
+    # lock-step decode; their rows track that continuous batching now
+    # covers every cache kind in configs/.
+    def engine_workload(arch):
+        cfg2 = get_config(arch, "smoke")
+        m2 = Model(cfg2)
+        p2 = m2.init(jax.random.key(0))
+        r3 = np.random.default_rng(2)
+        spec2 = [(int(r3.integers(4, max_len - 3)),
+                  int(r3.integers(2, max_new + 1)))
+                 for _ in range(n_requests)]
+
+        def wl():
+            r4 = np.random.default_rng(3)
+            return [Request(rid=i, prompt=r4.integers(
+                        0, cfg2.vocab_size, size=L).astype(np.int32),
+                        max_new_tokens=b)
+                    for i, (L, b) in enumerate(spec2)]
+
+        eng2 = Engine(m2, p2, max_len=max_len, max_new_tokens=max_new,
+                      num_slots=num_slots, decode_block_k=32)
+        for r in wl():
+            eng2.submit(r)
+        eng2.run()  # compile
+        t0 = time.perf_counter()
+        for r in wl():
+            eng2.submit(r)
+        eng2.run()
+        secs = time.perf_counter() - t0
+        tot = sum(b for _, b in spec2)
+        ds = eng2.decode_stats
+        return secs, {
+            "arch": arch,
+            "tokens_per_s": tot / secs,
+            "slot_utilization": ds["slot_utilization"],
+            "kv_block_ratio": ds["kv_block_ratio"],
+        }
+
+    rec_s, rec = engine_workload("mamba2-370m")
+    win_s, win = engine_workload("starcoder2-15b")
+
     ARTIFACTS["decode"] = {
         "tokens_per_s": useful / ct_s,
         "tokens_per_s_lockstep": useful / ls_s,
@@ -276,6 +320,8 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
         "kv_blocks_dense": eng.decode_stats["kv_blocks_dense"],
         "kv_block_ratio": blk_ratio,
         "decode_attn": eng.decode_attn,
+        "recurrent": rec,
+        "short_window": win,
     }
     return [
         ("decode/lockstep", ls_s * 1e6,
@@ -288,6 +334,13 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
         ("decode/kv_blocks", 0.0,
          f"visited_ratio={blk_ratio:.2f} (predicated TDA grid vs dense "
          f"sweep, block_k=32)"),
+        ("decode/recurrent", rec_s * 1e6,
+         f"arch={rec['arch']} tok/s={rec['tokens_per_s']:.0f} "
+         f"slot_util={rec['slot_utilization']:.2f} (SSD state lanes)"),
+        ("decode/short_window", win_s * 1e6,
+         f"arch={win['arch']} tok/s={win['tokens_per_s']:.0f} "
+         f"slot_util={win['slot_utilization']:.2f} "
+         f"kv_ratio={win['kv_block_ratio']:.2f} (ring lanes)"),
     ]
 
 

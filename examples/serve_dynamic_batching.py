@@ -1,8 +1,17 @@
-"""Serve a small model through the T-REX-style continuous-batching engine:
+"""Serve small models through the T-REX-style continuous-batching engine:
 short prompts share prefill weight sweeps (dynamic batching), long prompts
 are chunked instead of rejected, and decode runs one jitted step over a slot
-table of KV lanes with mid-decode admissions. Reports both utilization
-metrics: prefill packing fill and per-step decode slot occupancy.
+table of per-request cache lanes with mid-decode admissions. Reports both
+utilization metrics: prefill packing fill and per-step decode slot
+occupancy.
+
+Two stacks go through the same engine to show the slot-state table is
+cache-kind agnostic (docs/serving.md):
+
+* a dense GQA transformer (full-attention KV lanes, packed prefill), and
+* a recurrentgemma-style hybrid (RG-LRU recurrent state lanes + ring-
+  buffered short-window attention lanes, row-per-request prefill) — the
+  stacks that used to fall back to seed-style lock-step decode.
 
   PYTHONPATH=src python examples/serve_dynamic_batching.py
 """
@@ -45,6 +54,24 @@ def main():
     print(f"decode: {ds['decoded_tokens']} tokens in {ds['steps']} steps, "
           f"per-step slot utilization {ds['slot_utilization']:.2f} "
           f"(the serving-side PE-utilization analogue)")
+
+    # ---- same engine, recurrent + ring cache kinds (no lock-step path) ----
+    rcfg = get_config("recurrentgemma-2b", "smoke")
+    rmodel = Model(rcfg)
+    rparams = rmodel.init(jax.random.key(1))
+    reng = Engine(rmodel, rparams, max_len=16, max_new_tokens=6, num_slots=4)
+    for rid, n in enumerate(rng.integers(3, 14, size=12)):
+        reng.submit(Request(rid=rid, prompt=rng.integers(
+            0, rcfg.vocab_size, size=int(n)).astype(np.int32),
+            max_new_tokens=int(rng.integers(2, 7))))
+    rdone = reng.run()
+    rds = reng.decode_stats
+    print(f"\nrecurrent hybrid ({rcfg.name}): served {len(rdone)} requests "
+          f"through RG-LRU state lanes + local-window ring lanes")
+    print(f"decode: {rds['decoded_tokens']} tokens in {rds['steps']} steps, "
+          f"slot utilization {rds['slot_utilization']:.2f}, "
+          f"kv-block ratio {rds['kv_block_ratio']:.2f} "
+          f"(row-per-request right-aligned prefill; see docs/serving.md)")
 
 
 if __name__ == "__main__":

@@ -47,6 +47,14 @@ def fused_decode_attention(
     Valid positions per slot are ``[max(0, lengths - window), lengths)``
     (``window=None`` -> ``[0, lengths)``). Slots with ``lengths <= 0``
     return zeros. Output matches ``q``'s leading shape, dtype ``q.dtype``.
+
+    Ring-buffered lanes (windowed caches shorter than the lane, stored in
+    canonical ring phase — see the bounds contract in ``tda.py`` and
+    ``docs/serving.md``) pass ``lengths = min(len + 1, ring)`` with
+    ``window=None``: every ring position below the clamp is valid and
+    ordering is irrelevant to the softmax, so no per-slot offset input is
+    needed. This is what :func:`repro.models.layers.attention_block` does
+    on the serving decode path.
     """
     squeeze = q.ndim == 4
     if squeeze:

@@ -10,6 +10,25 @@ per-(token, head) scales and are dequantized in VMEM, so the dense fp cache
 never exists outside the chip. GQA queries are packed (Hkv, G, D) and both
 contractions are batched ``dot_general`` over the kv-head axis.
 
+The ``[lo, hi)`` bounds contract (see ``docs/serving.md`` for the serving
+side of it): cache positions ``lo <= p < hi`` of slot ``b`` are attended,
+everything else is skipped — the kernel itself is agnostic to *why* a span
+is valid. The three lane kinds of the slot-state table all reduce to it:
+
+* full-attention lane, ``len`` tokens cached: ``[0, len)`` (after the
+  decode step writes its token: ``[0, len + 1)``);
+* windowed lane over a full-length cache: ``[max(0, len - window), len)``;
+* ring-buffered lane of width ``ring`` in canonical ring phase (token ``t``
+  stored at ``t % ring``, the layout ``serve/kv_slots.py`` establishes at
+  assign time and ``layers.attention_block``'s write pointer
+  ``cache_index % ring`` preserves): ``[0, min(len, ring))``. Ring storage
+  order does not matter to attention (softmax is permutation-invariant over
+  the valid set, RoPE is applied at write time), so a per-slot ring offset
+  never has to reach the kernel — canonical phase makes it identically
+  zero, and occupancy stays a contiguous ``[lo, hi)`` span.
+
+``hi <= lo`` marks a never-attended lane (inactive slot): output zeros.
+
 The ``lut_table`` input (optional) routes the two exponentials through the
 AFU's 64-entry piecewise-linear exp — the same table
 :func:`repro.kernels.afu.ref.exp_lut_table` feeds the fused-softmax kernel —

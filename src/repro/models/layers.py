@@ -331,7 +331,10 @@ def decode_attention(
 
     ``cache_index`` may be a scalar (every row at the same depth — the
     lock-step serve path) or a ``(B,)`` vector (slot-based continuous
-    batching: each row is an independent request at its own depth).
+    batching: each row is an independent request at its own depth). Ring
+    caches are read by passing ``cache_index = min(len + 1, ring)`` with
+    ``window=None`` — canonical ring phase keeps occupancy a contiguous
+    ``[0, hi)`` span (the bounds contract in ``kernels/tda/tda.py``).
 
     ``impl="tda"`` dispatches to the fused Pallas kernel
     (:mod:`repro.kernels.tda`): per-slot length predication skips dead kv
@@ -516,8 +519,18 @@ def attention_block(
         o = o.reshape(B, S, cfg.n_heads * hd)
     else:
         if cache is not None:  # prefill writing the cache
-            kw = k if k.shape[1] <= ring else k[:, -ring:]
-            vw = v if v.shape[1] <= ring else v[:, -ring:]
+            def ring_layout(t):
+                """Last ``ring`` tokens in *canonical ring phase*: token at
+                (row) position p lands at cache position ``p % ring``, the
+                same phase decode's write pointer ``cache_index % ring``
+                uses — so the first decoded token overwrites the oldest
+                cached one. (The previous un-rotated layout left a stale
+                token visible whenever the prompt exceeded the window.)"""
+                if t.shape[1] <= ring:
+                    return t
+                return jnp.roll(t[:, -ring:], t.shape[1] % ring, axis=1)
+
+            kw, vw = ring_layout(k), ring_layout(v)
             if quant:
                 kq, ks = kv_quantize(kw)
                 vq, vs = kv_quantize(vw)

@@ -86,6 +86,9 @@ def rglru_block(
     cfg: ModelConfig,
     dicts: Optional[Dict],
     cache: Optional[Dict] = None,
+    seg_ids: Optional[jnp.ndarray] = None,  # (B, S) int, 0 = padding
+    slot_mask: Optional[jnp.ndarray] = None,  # (B,) bool: rows allowed to
+    # update their recurrent state (inactive serving slots stay frozen)
     sparse_train: bool = False,
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     fcfg = cfg.factorization
@@ -97,16 +100,34 @@ def rglru_block(
         .astype(jnp.float32))
     u = apply_linear(p["w_x"], x, dicts, "rglru_x", fcfg, sparse_train).astype(dt)
 
+    # Padding positions (seg id 0) are identity steps: their conv input is
+    # zeroed (matching the zero initial conv state of an unpadded run) and
+    # their recurrence update is (a, b) = (1, 0), so a right-aligned padded
+    # row ends in exactly the state a solo unpadded forward would produce —
+    # this is what lets the serving engine gather end-of-row states into
+    # slot lanes (serve/kv_slots.py).
+    seg_mask = None
+    if seg_ids is not None and S > 1:
+        seg_mask = (seg_ids > 0)[..., None]  # (B, S, 1)
+        u = jnp.where(seg_mask, u, 0)
+
     if cache is not None and S == 1:
         conv_out, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"],
                                           cache["conv"])
         a, b = _rglru_gates(p, conv_out[:, 0])
         h = a * cache["h"] + b  # (B, w)
+        if slot_mask is not None:
+            live = jnp.reshape(slot_mask, (-1, 1))
+            h = jnp.where(live, h, cache["h"])
+            new_conv = jnp.where(live[:, None], new_conv, cache["conv"])
         new_cache = {"h": h, "conv": new_conv}
         ht = h[:, None]
     else:
         conv_out, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"])
         a, b = _rglru_gates(p, conv_out)  # (B,S,w)
+        if seg_mask is not None:
+            a = jnp.where(seg_mask, a, 1.0)
+            b = jnp.where(seg_mask, b, 0.0)
 
         def combine(c1, c2):
             a1, b1 = c1

@@ -139,6 +139,9 @@ def ssd_block(
     cache: Optional[Dict] = None,
     cache_index: Optional[jnp.ndarray] = None,
     layer_idx: Optional[jnp.ndarray] = None,
+    seg_ids: Optional[jnp.ndarray] = None,  # (B, S) int, 0 = padding
+    slot_mask: Optional[jnp.ndarray] = None,  # (B,) bool: rows allowed to
+    # update their recurrent state (inactive serving slots stay frozen)
     sparse_train: bool = False,
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     s, d_in, H, conv_ch = _dims(cfg)
@@ -170,6 +173,17 @@ def ssd_block(
     A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,) negative
     dt_f = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
 
+    # Padding positions (seg id 0) are identity steps: zeroed conv input
+    # (matching the zero initial conv taps of an unpadded run) and dt = 0,
+    # which makes the SSD recurrence decay exp(dt*A) = 1 with zero input
+    # contribution. A right-aligned padded row therefore ends in exactly the
+    # state a solo unpadded forward would produce, so the serving engine can
+    # gather end-of-row states into slot lanes (serve/kv_slots.py).
+    if seg_ids is not None and S > 1:
+        seg_mask = (seg_ids > 0)
+        conv_in = jnp.where(seg_mask[..., None], conv_in, 0)
+        dt_f = jnp.where(seg_mask[..., None], dt_f, 0.0)
+
     if cache is not None and S == 1:
         # ---- decode: O(1) recurrent update
         conv_state = view(cache["conv"])
@@ -195,6 +209,10 @@ def ssd_block(
         yh = jnp.einsum("bhn,bhnp->bhp", Ch, h)
         yh = yh + p["D"].astype(jnp.float32)[:, None] * xh
         y_out = yh.reshape(B_, 1, d_in)
+        if slot_mask is not None:
+            live = jnp.reshape(slot_mask, (-1, 1))
+            h = jnp.where(live[..., None, None], h, view(cache["state"]))
+            new_conv = jnp.where(live[:, None], new_conv, conv_state)
         new_cache = {"state": write(cache["state"], h),
                      "conv": write(cache["conv"], new_conv)}
     else:

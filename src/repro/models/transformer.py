@@ -155,12 +155,14 @@ class Model:
             out, new_cache = S.ssd_block(
                 lp["ssd"], h, cfg=cfg, dicts=dicts, cache=cache_l,
                 cache_index=cache_index, layer_idx=layer_idx,
+                seg_ids=seg_ids, slot_mask=slot_mask,
                 sparse_train=sparse_train)
             x = x + out
         elif kind == "rglru":
             h = L.apply_norm(lp["norm1"], x)
             out, new_cache = R.rglru_block(lp["rglru"], h, cfg=cfg, dicts=dicts,
-                                           cache=cache_l,
+                                           cache=cache_l, seg_ids=seg_ids,
+                                           slot_mask=slot_mask,
                                            sparse_train=sparse_train)
             x = x + out
             h2 = L.apply_norm(lp["norm2"], x)
@@ -311,12 +313,23 @@ class Model:
     # caches / decode
     # ------------------------------------------------------------------
 
-    def _init_block_cache(self, kind: str, batch: int, max_len: int) -> Dict:
+    def _block_ring(self, kind: str, max_len: int, ring: bool = True) -> int:
+        """Sequence capacity of one attention cache lane: the window clamps
+        it to a ring buffer unless ``ring=False`` (full-length caches, used
+        by the serving engine's prefill so every position stays addressable
+        for the slot-lane gather)."""
+        cfg = self.cfg
+        window = cfg.local_window if kind == "local" else cfg.sliding_window
+        if window is None or not ring:
+            return max_len
+        return min(window, max_len)
+
+    def _init_block_cache(self, kind: str, batch: int, max_len: int,
+                          ring: bool = True) -> Dict:
         cfg = self.cfg
         if kind in ("attn", "local"):
-            window = cfg.local_window if kind == "local" else cfg.sliding_window
-            ring = min(window, max_len) if window is not None else max_len
-            shape = (batch, ring, cfg.kv_heads, cfg.head_dim)
+            shape = (batch, self._block_ring(kind, max_len, ring),
+                     cfg.kv_heads, cfg.head_dim)
             if cfg.kv_quant:
                 return {"k": jnp.zeros(shape, jnp.int8),
                         "v": jnp.zeros(shape, jnp.int8),
@@ -330,14 +343,51 @@ class Model:
             return R.init_rglru_cache(cfg, batch)
         raise ValueError(kind)
 
-    def init_cache(self, batch: int, max_len: int):
+    def init_cache(self, batch: int, max_len: int, ring: bool = True):
+        """Zero decode caches. ``ring=True`` clamps windowed attention lanes
+        to their ring-buffer size (decode layout); ``ring=False`` keeps every
+        sequence position (the engine's prefill layout, so a slot-lane gather
+        can address any row position regardless of the window)."""
         cfg = self.cfg
         if cfg.uniform_layers:
-            one = self._init_block_cache(cfg.block_kind(0), batch, max_len)
+            one = self._init_block_cache(cfg.block_kind(0), batch, max_len,
+                                         ring)
             return jax.tree.map(
                 lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
         return {f"layer_{i:02d}": self._init_block_cache(cfg.block_kind(i),
-                                                         batch, max_len)
+                                                         batch, max_len, ring)
+                for i in range(cfg.n_layers)}
+
+    def cache_lane_specs(self):
+        """Per-leaf lane kinds for the slot-state table, as a pytree with the
+        same structure as :meth:`init_cache` output. Leaves are strings:
+
+        * ``"kv"`` — a per-token lane with the sequence axis right after the
+          batch axis: full attention KV/scales (width ``cache_len``) or a
+          ring-buffered windowed lane (width ``min(window, cache_len)``). The
+          slot table gathers request segments into it in *canonical ring
+          phase* (token ``t`` at position ``t % width``).
+        * ``"state"`` — a fixed-shape recurrent state (RG-LRU hidden state,
+          SSD state, conv taps): no sequence axis; assign copies the whole
+          per-row state and advance is a no-op.
+        """
+        cfg = self.cfg
+
+        def block_spec(kind: str) -> Dict:
+            if kind in ("attn", "local"):
+                spec = {"k": "kv", "v": "kv"}
+                if cfg.kv_quant:
+                    spec.update({"k_scale": "kv", "v_scale": "kv"})
+                return spec
+            if kind == "ssd":
+                return {"state": "state", "conv": "state"}
+            if kind == "rglru":
+                return {"h": "state", "conv": "state"}
+            raise ValueError(kind)
+
+        if cfg.uniform_layers:
+            return block_spec(cfg.block_kind(0))
+        return {f"layer_{i:02d}": block_spec(cfg.block_kind(i))
                 for i in range(cfg.n_layers)}
 
     def decode_step(self, params: Dict, batch: Dict, caches,

@@ -1,20 +1,29 @@
 """Serving layer: T-REX dynamic batching extended to continuous batching.
 
-Architecture (one PR's worth of the ROADMAP's "scale + speed" direction):
+Architecture:
 
 * :mod:`repro.serve.scheduler` — iteration-level admission queue.
   ``Scheduler`` packs short prompts into shared prefill rows (the paper's
-  ≤max/2-pairs / ≤max/4-quads policy) and chunks long ones instead of
-  rejecting them; it absorbed the old ``DynamicBatcher`` (kept as an alias).
-* :mod:`repro.serve.kv_slots` — ``SlotKVCache``, a fixed-capacity table of
-  per-request KV lanes inside one fixed-shape model cache; per-step slot
-  occupancy is the serving analogue of the paper's PE utilization.
-* :mod:`repro.serve.engine` — ``Engine``: packed prefill → lane gather →
-  one jitted decode step over all slots per token, with mid-decode
-  admissions and per-request stop conditions.
+  ≤max/2-pairs / ≤max/4-quads policy), chunks long ones instead of
+  rejecting them, and emits row-per-request admissions (``pack=False``) for
+  recurrent stacks; it absorbed the old ``DynamicBatcher`` (kept as an
+  alias).
+* :mod:`repro.serve.kv_slots` — ``SlotKVCache`` (a.k.a. ``SlotStateTable``),
+  a fixed-capacity table of per-request cache lanes inside one fixed-shape
+  model cache. Lanes are kind-aware: full-attention KV, ring-buffered
+  windowed KV (canonical ring phase), and fixed-shape recurrent states
+  (RG-LRU / SSD). Per-step slot occupancy is the serving analogue of the
+  paper's PE utilization.
+* :mod:`repro.serve.engine` — ``Engine``: prefill → lane assign → one
+  jitted decode step over all slots per token, with mid-decode admissions
+  and per-request stop conditions, for every ``configs/`` architecture
+  (the lock-step fallback is gone).
+
+See ``docs/serving.md`` for the slot-engine lifecycle and the benchmark
+sidecar contract.
 """
 from repro.serve.engine import Engine  # noqa: F401
-from repro.serve.kv_slots import SlotKVCache  # noqa: F401
+from repro.serve.kv_slots import SlotKVCache, SlotStateTable  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
     Admission,
     DynamicBatcher,
@@ -22,5 +31,5 @@ from repro.serve.scheduler import (  # noqa: F401
     Scheduler,
 )
 
-__all__ = ["Engine", "SlotKVCache", "Scheduler", "DynamicBatcher",
-           "Request", "Admission"]
+__all__ = ["Engine", "SlotKVCache", "SlotStateTable", "Scheduler",
+           "DynamicBatcher", "Request", "Admission"]

@@ -4,17 +4,25 @@ The seed engine applied the paper's dynamic batching only at prefill, then
 decoded each drained batch in a lock-step Python loop — per-token host sync,
 re-prefilling from scratch, and no admissions until the whole batch finished.
 This engine extends the weight-reuse idea to the decode phase, where real
-serving traffic lives:
+serving traffic lives, for **every** architecture in ``configs/`` (full
+attention, short-window ring caches, and SSM/RG-LRU recurrent states —
+the lock-step fallback those stacks used to take is gone):
 
-1. **Packed prefill** (unchanged in spirit): the scheduler packs queued
-   short prompts into shared ``(rows, max_len)`` rows with segment ids; one
-   weight sweep prefills them all and yields each request's first token.
-   Prompts longer than ``max_len`` are chunked and prefilled solo instead of
-   being rejected.
-2. **Lane gather**: each admitted request's KV segment is gathered out of
+1. **Prefill**: the scheduler packs queued short prompts into shared
+   ``(rows, max_len)`` rows with segment ids; one weight sweep prefills
+   them all and yields each request's first token. Prompts longer than
+   ``max_len`` are chunked and prefilled solo instead of being rejected.
+   Stacks with recurrent layers prefill one request per row,
+   *right-aligned* with padding masked to identity updates, because the
+   prefill cache stores only each row's end-of-sequence state (see
+   ``docs/serving.md``). Prefill caches are always full-length
+   (``init_cache(..., ring=False)``) so the lane gather below can address
+   any row position even under a short window.
+2. **Lane assign**: each admitted request's cached state is gathered out of
    the prefill cache into a free lane of a fixed-capacity
-   :class:`~repro.serve.kv_slots.SlotKVCache` (segment masking made the
-   packed K/V identical to an unpacked computation, so this is exact).
+   :class:`~repro.serve.kv_slots.SlotKVCache` — a KV segment for attention
+   lanes (ring lanes land in canonical ring phase), the end-of-row state
+   for recurrent lanes.
 3. **Continuous decode**: every step is ONE jitted fixed-shape call over all
    ``num_slots`` lanes — per-slot cache indices, active-slot masking, greedy
    argmax inside the graph — so the only host traffic per step is a single
@@ -25,7 +33,8 @@ serving traffic lives:
 
 ``stats`` records one entry per prefill sweep (legacy keys ``rows`` /
 ``n_requests`` / ``utilization``); ``decode_stats`` aggregates the per-step
-slot utilization and token counts after :meth:`run`.
+slot utilization, token counts and the predicated-attention blocks-visited
+accounting after :meth:`run`.
 """
 from __future__ import annotations
 
@@ -42,6 +51,8 @@ from repro.serve.kv_slots import SlotKVCache
 from repro.serve.scheduler import Admission, Request, Scheduler
 
 __all__ = ["Engine"]
+
+RECURRENT_KINDS = frozenset({"ssd", "rglru"})
 
 
 class Engine:
@@ -63,17 +74,15 @@ class Engine:
         # the chunking path (raise max_prompt_len for longer traffic).
         self.max_prompt_len = max_prompt_len or 2 * max_len
         self.cache_len = self.max_prompt_len + self.max_new
-        self.scheduler = Scheduler(max_len=max_len, max_rows=max_rows,
-                                   max_prompt_len=self.max_prompt_len)
-        try:
-            self.slots: Optional[SlotKVCache] = SlotKVCache(
-                model, num_slots, self.cache_len)
-        except NotImplementedError:
-            # Recurrent states / short ring buffers can't be lane-gathered
-            # yet (see kv_slots.py): fall back to seed-style lock-step
-            # decode so those architectures keep serving.
-            self.slots = None
         kinds = {model.cfg.block_kind(i) for i in range(model.cfg.n_layers)}
+        # Recurrent prefill caches hold one end-of-sequence state per row,
+        # so those stacks admit one request per row (no intra-row packing);
+        # the weight sweep is still shared across the admitted rows.
+        self._recurrent = bool(kinds & RECURRENT_KINDS)
+        self.scheduler = Scheduler(max_len=max_len, max_rows=max_rows,
+                                   max_prompt_len=self.max_prompt_len,
+                                   pack=not self._recurrent)
+        self.slots = SlotKVCache(model, num_slots, self.cache_len)
         # SSD's chunked scan needs prefill widths that are chunk multiples.
         self._ssd_chunk = model.cfg.ssm.chunk \
             if "ssd" in kinds and model.cfg.ssm else None
@@ -84,13 +93,21 @@ class Engine:
         self.decode_attn = resolve_decode_attn(decode_attn) \
             if kinds & {"attn", "local"} else "dense"
         dmodel = model.with_decode_attn(self.decode_attn, decode_block_k)
-        self._block_k = min(dmodel.cfg.decode_block_k, self.cache_len)
+        self._block_k = dmodel.cfg.decode_block_k
+        # Distinct attention-lane shapes for the blocks-visited accounting:
+        # one (ring, block_k) descriptor per distinct window among the
+        # attention layers (pure-recurrent stacks have none).
+        self._attn_rings = sorted({
+            model._block_ring(k, self.cache_len)
+            for k in kinds if k in ("attn", "local")})
         self.stats: List[Dict] = []  # one entry per prefill sweep
         self.decode_stats: Dict = {}
 
         def prefill_fn(params, batch):
             rows, width = batch["inputs"].shape
-            caches = model.init_cache(rows, width)
+            # Full-length caches (no ring clamp): the slot-lane gather must
+            # be able to address every row position (kv_slots.py).
+            caches = model.init_cache(rows, width, ring=False)
             logits, new_caches, _ = model.apply(
                 params, batch, caches=caches, cache_index=jnp.int32(0),
                 mesh=mesh)
@@ -103,23 +120,6 @@ class Engine:
             nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
             return nxt, new_caches
 
-        def lockstep_prefill_fn(params, batch):
-            # Prefill exactly the prompt tokens into a cache sized for the
-            # decode budget (padding the prompt instead would push pad KV
-            # into windowed ring buffers).
-            rows, width = batch["inputs"].shape
-            caches = model.init_cache(rows, width + max_new_tokens)
-            logits, new_caches, _ = model.apply(
-                params, batch, caches=caches, cache_index=jnp.int32(0),
-                mesh=mesh)
-            return logits, new_caches
-
-        def lockstep_decode_fn(params, tokens, caches, idx):
-            logits, new_caches = dmodel.decode_step(
-                params, {"inputs": tokens}, caches, idx, mesh=mesh)
-            return (jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32),
-                    new_caches)
-
         # One compile per prefill shape — widths are max_len multiples and
         # packed row counts are padded to powers of two, so the set is small
         # and bounded — and exactly one for decode: shapes never depend on
@@ -128,9 +128,6 @@ class Engine:
         donate = (2,) if jax.default_backend() != "cpu" else ()
         self._prefill = jax.jit(prefill_fn)
         self._decode = jax.jit(decode_fn, donate_argnums=donate)
-        self._prefill_lockstep = jax.jit(lockstep_prefill_fn)
-        self._decode_lockstep = jax.jit(lockstep_decode_fn,
-                                        donate_argnums=donate)
 
     # ------------------------------------------------------------------
 
@@ -140,8 +137,6 @@ class Engine:
     def run(self) -> List[Request]:
         """Serve until queue and slots are empty; returns finished requests
         in completion order."""
-        if self.slots is None:
-            return self._run_lockstep()
         sl = self.slots
         done: List[Request] = []
         cur = np.zeros(self.num_slots, np.int32)      # next input token
@@ -164,11 +159,15 @@ class Engine:
 
             # Predicated-kernel work accounting: the TDA grid visits only
             # the kv blocks covering each active lane's occupancy (+1 for
-            # the token being written); dense is the full slot-table sweep.
-            bs = block_stats(np.where(sl.active, sl.lengths + 1, 0),
-                             self.cache_len, self._block_k)
-            blocks_visited += bs["visited"]
-            blocks_dense += bs["dense"]
+            # the token being written, clamped to the lane's ring width);
+            # dense is the full slot-table sweep. One term per distinct
+            # attention-lane ring among the layers.
+            for ring in self._attn_rings:
+                bs = block_stats(
+                    np.where(sl.active, np.minimum(sl.lengths + 1, ring), 0),
+                    ring, min(self._block_k, ring))
+                blocks_visited += bs["visited"]
+                blocks_dense += bs["dense"]
 
             nxt, sl.caches = self._decode(
                 self.params, jnp.asarray(cur[:, None]), sl.caches,
@@ -244,7 +243,7 @@ class Engine:
                      "positions": jnp.asarray(np.pad(packed.positions, pad)),
                      "seg_ids": jnp.asarray(np.pad(packed.segment_ids, pad))}
             slots_of = packed.request_slots
-        else:  # solo long prompt, width = n_chunks * max_len
+        elif adm.chunks is not None:  # solo long prompt
             prompt = np.concatenate(adm.chunks)
             width = len(adm.chunks) * self.max_len
             tokens = np.zeros((1, width), np.int32)
@@ -258,86 +257,40 @@ class Engine:
                      "seg_ids": jnp.asarray(seg)}
             slots_of = [(0, 0, L)]
             rows = 1
+        else:  # row-per-request (recurrent stacks), right-aligned
+            batch, slots_of, rows = self._rows_batch(adm)
         logits, caches = self._prefill(self.params, batch)
         self.stats.append({"rows": rows, "n_requests": len(adm.requests),
                            "utilization": adm.utilization})
         return logits, caches, slots_of
 
-    # ------------------------------------------------------------------
-    # lock-step fallback (recurrent / short-ring caches)
-    # ------------------------------------------------------------------
-
-    def _run_lockstep(self) -> List[Request]:
-        """Seed-style decode for stacks SlotKVCache can't hold: drain the
-        queue in static left-aligned batches, scalar cache index, no
-        mid-decode admissions. Keeps submit/run/stats semantics so every
-        architecture stays servable; the continuous path is strictly better
-        where it applies."""
-        done: List[Request] = []
-        steps = 0
-        active_row_steps = 0
-        row_steps = 0
-        decoded = 0
-        while True:
-            nb = self.scheduler.next_batch()
-            if nb is None:
-                break
-            reqs = nb["requests"]
-            B = len(reqs)
-            maxp = max(len(r.prompt) for r in reqs)
-            # SSD stacks scan the prefill in fixed chunks: round the width
-            # up to a chunk multiple (trailing pads ride segment id 0).
-            q = self._ssd_chunk
-            if q is not None and maxp > q and maxp % q:
-                maxp = ((maxp + q - 1) // q) * q
-            rows = np.zeros((B, maxp), np.int32)
-            seg = np.zeros((B, maxp), np.int32)
-            pos = np.tile(np.arange(maxp, dtype=np.int32), (B, 1))
-            for i, r in enumerate(reqs):
-                L = len(r.prompt)
-                rows[i, :L] = r.prompt
-                seg[i, :L] = 1
-            # all-position logits + caches sized for the decode budget
-            logits, caches = self._prefill_lockstep(
-                self.params, {"inputs": jnp.asarray(rows),
-                              "positions": jnp.asarray(pos),
-                              "seg_ids": jnp.asarray(seg)})
-            logits = np.asarray(logits)
-            self.stats.append({"rows": B, "n_requests": B,
-                               "utilization": float(seg.mean())})
-            budgets = [min(r.max_new_tokens, self.max_new) for r in reqs]
-            finished = [False] * B
-            cur = np.zeros((B, 1), np.int32)
-            for i, r in enumerate(reqs):
-                tok = int(np.argmax(logits[i, len(r.prompt) - 1]))
-                cur[i, 0] = tok
-                if budgets[i] >= 1:
-                    r.output.append(tok)
-                finished[i] = budgets[i] <= 1 or tok == self.eos_id
-            idx = jnp.int32(maxp)
-            for _ in range(max(budgets) - 1 if budgets else 0):
-                if all(finished):
-                    break
-                toks, caches = self._decode_lockstep(
-                    self.params, jnp.asarray(cur), caches, idx)
-                toks = np.asarray(toks)
-                idx = idx + 1
-                steps += 1
-                row_steps += B
-                for i, r in enumerate(reqs):
-                    tok = int(toks[i])
-                    cur[i, 0] = tok
-                    if finished[i]:
-                        continue
-                    active_row_steps += 1
-                    r.output.append(tok)
-                    decoded += 1
-                    finished[i] = (len(r.output) >= budgets[i]
-                                   or tok == self.eos_id)
-            done.extend(reqs)
-        self.decode_stats = {
-            "steps": steps,
-            "decoded_tokens": decoded,
-            "slot_utilization": active_row_steps / max(row_steps, 1),
-        }
-        return done
+    def _rows_batch(self, adm: Admission):
+        """Row-per-request prefill layout for stacks with recurrent state:
+        each request rides its own row, **right-aligned**, so the row's
+        end-of-sequence state (the only thing a recurrent prefill cache
+        stores) is exactly the request's state. Leading padding carries
+        segment id 0: attention masks it out and the recurrent blocks treat
+        it as identity updates (models/rglru.py, models/ssd.py), so the
+        result is bit-equivalent to prefilling each request alone."""
+        width = adm.row_width
+        q = self._ssd_chunk
+        if q is not None and width > q and width % q:
+            width = ((width + q - 1) // q) * q  # SSD scans fixed chunks
+            adm.row_width = width  # keep the utilization stat honest
+        rows = len(adm.requests)
+        pad_rows = 1 << (rows - 1).bit_length()  # bounds compile variants
+        tokens = np.zeros((pad_rows, width), np.int32)
+        seg = np.zeros((pad_rows, width), np.int32)
+        pos = np.zeros((pad_rows, width), np.int32)
+        slots_of = []
+        for i, req in enumerate(adm.requests):
+            L = len(req.prompt)
+            start = width - L
+            tokens[i, start:] = req.prompt
+            seg[i, start:] = 1
+            pos[i, start:] = np.arange(L)
+            slots_of.append((i, start, L))
+        batch = {"inputs": jnp.asarray(tokens),
+                 "positions": jnp.asarray(pos),
+                 "seg_ids": jnp.asarray(seg)}
+        return batch, slots_of, rows

@@ -1,19 +1,40 @@
-"""Slot table of per-request KV cache lanes for continuous batching.
+"""Universal slot-state table: per-request cache lanes for continuous
+batching, for *every* cache kind a model can carry.
 
 The decode-side counterpart of the paper's dynamic batching: a fixed-capacity
-``SlotKVCache`` holds ``num_slots`` independent KV lanes inside one
-fixed-shape model cache (batch dim = slots), so the engine's decode step is a
-single jitted call over *all* slots regardless of which requests occupy them.
+``SlotKVCache`` holds ``num_slots`` independent lanes inside one fixed-shape
+model cache (batch dim = slots), so the engine's decode step is a single
+jitted call over *all* slots regardless of which requests occupy them.
 Request lifecycles only touch host-side metadata plus a lane copy:
 
-* ``assign`` / ``assign_many`` gather request KV segments out of a (packed
-  or solo) prefill cache — rows of a packed prefill interleave several
-  requests, and ``request_slots`` says where each one's tokens landed — and
-  write them into free lanes at positions ``[0, len)``; a whole admission
-  round is one fused per-leaf gather + scatter, not a per-slot loop.
+* ``assign`` / ``assign_many`` gather request state out of a prefill cache —
+  rows of a packed prefill interleave several requests, and
+  ``request_slots`` says where each one's tokens landed — and write it into
+  free lanes; a whole admission round is one fused per-leaf gather +
+  scatter, not a per-slot loop.
 * ``release`` just flips the host-side ``active`` bit; the stale lane is
   masked out of the decode step via ``slot_mask`` and overwritten by the
   next ``assign``.
+
+Every cache leaf is typed by a *lane spec* from
+:meth:`repro.models.transformer.Model.cache_lane_specs`:
+
+* ``"kv"`` — per-token lanes (sequence axis right after the batch axis).
+  Full-attention leaves have width ``cache_len``; windowed leaves are ring
+  buffers of width ``ring = min(window, cache_len)``. Assign gathers the
+  request's last ``min(len, ring)`` tokens into **canonical ring phase**
+  (token ``t`` at position ``t % ring``), which is exactly the phase of the
+  decode step's write pointer ``cache_index % ring`` — the per-slot ring
+  offset is folded into the gather once, so it is identically zero on the
+  jitted decode path and the TDA kernel's ``[lo, hi)`` occupancy bounds
+  stay ``[0, min(len, ring))``. The source must be a *full-length* prefill
+  cache (``Model.init_cache(..., ring=False)``) so every row position is
+  addressable.
+* ``"state"`` — fixed-shape recurrent states (RG-LRU hidden state, SSD
+  state, causal-conv taps): no sequence segment to slice; assign is a
+  batched gather of whole per-row states (the engine right-aligns recurrent
+  prefill rows so the end-of-row state *is* the end-of-request state) and
+  the per-token ``advance`` is a no-op on the lane contents.
 
 Per-step slot occupancy (`utilization()`) is the serving analogue of the
 paper's PE-utilization metric: idle lanes are idle PEs under a shared weight
@@ -29,40 +50,33 @@ import numpy as np
 
 from repro.models.transformer import Model
 
-__all__ = ["SlotKVCache"]
+__all__ = ["SlotKVCache", "SlotStateTable"]
 
 # (slot, request, row, start, length) — one admitted request's lane copy.
 Assignment = Tuple[int, Any, int, int, int]
 
 
 class SlotKVCache:
-    """Fixed-capacity table of per-request KV cache lanes.
+    """Fixed-capacity table of per-request cache lanes (any cache kind).
 
-    ``caches`` is a regular model cache pytree with batch dim ``num_slots``
-    and sequence dim ``cache_len``; lane ``s`` belongs to whatever request
-    ``request[s]`` points at. ``lengths[s]`` is the number of valid cached
-    tokens in lane ``s`` (== the next write position for decode).
+    ``caches`` is a regular model cache pytree with batch dim ``num_slots``;
+    per-token leaves have sequence dim ``cache_len`` (or their ring width);
+    lane ``s`` belongs to whatever request ``request[s]`` points at.
+    ``lengths[s]`` is the number of tokens request ``s`` has pushed through
+    the model (== the decode step's ``cache_index``; for ring lanes the
+    write pointer is ``lengths % ring``, for state lanes it only feeds RoPE
+    positions).
     """
 
     def __init__(self, model: Model, num_slots: int, cache_len: int):
-        cfg = model.cfg
-        kinds = {cfg.block_kind(i) for i in range(cfg.n_layers)}
-        if not kinds <= {"attn", "local"}:
-            raise NotImplementedError(
-                f"SlotKVCache supports attention caches only, got {kinds} — "
-                "recurrent states cannot be gathered out of packed rows")
-        windows = [cfg.local_window if cfg.block_kind(i) == "local"
-                   else cfg.sliding_window for i in range(cfg.n_layers)]
-        if any(w is not None and w < cache_len for w in windows):
-            raise NotImplementedError(
-                "SlotKVCache does not support ring-buffered (windowed) "
-                f"caches shorter than cache_len={cache_len}")
         if num_slots <= 0 or cache_len <= 0:
             raise ValueError("num_slots and cache_len must be positive")
         self.num_slots = num_slots
         self.cache_len = cache_len
+        cfg = model.cfg
         self._stacked = cfg.uniform_layers  # leaves carry a leading L dim
         self.caches = model.init_cache(num_slots, cache_len)
+        self.specs = model.cache_lane_specs()  # "kv" | "state" per leaf
         # host-side slot metadata
         self.active = np.zeros(num_slots, bool)
         self.lengths = np.zeros(num_slots, np.int32)
@@ -83,30 +97,46 @@ class SlotKVCache:
 
     def _copy_lane(self, dst_caches, src_caches, slots, rows, starts,
                    lengths):
-        """Write ``src[rows[j], starts[j]:starts[j]+lengths[j]]`` into lane
-        ``slots[j]`` at ``[0:lengths[j]]`` for every j at once (remainder
-        zeroed — decode masks positions >= length anyway). One fused gather
-        per cache leaf: all J source rows come out in a single ``jnp.take``,
-        their segments in a single clipped ``take_along_axis``, and the lanes
-        land via one scatter on the slot axis — no per-slot Python loop, no
-        O(num_slots) one-hot select. Static shapes throughout, so one jit
-        covers every admission round of a given size and source width."""
+        """Copy every assignment j's state out of ``src[rows[j]]`` into lane
+        ``slots[j]`` in one fused gather + scatter per cache leaf — no
+        per-slot Python loop, no O(num_slots) one-hot select. Static shapes
+        throughout, so one jit covers every admission round of a given size
+        and source width.
+
+        * ``"kv"`` leaves: gather the segment's last ``min(len, ring)``
+          tokens (``ring`` = the leaf's own width) from row positions
+          ``[starts[j], starts[j] + lengths[j])`` into canonical ring phase
+          (token ``t`` at ``t % ring``); the remainder is zeroed (decode
+          masks positions outside ``[0, min(len, ring))`` anyway).
+        * ``"state"`` leaves: gather the whole per-row state.
+        """
         ba = 1 if self._stacked else 0  # batch axis of every cache leaf
         J = slots.shape[0]
-        # (J, cache_len) source positions, clipped per leaf to its width
-        seq_pos = starts[:, None] + jnp.arange(self.cache_len)[None, :]
-        valid = jnp.arange(self.cache_len)[None, :] < lengths[:, None]
 
-        def per_leaf(dst, src):
+        def per_leaf(dst, src, spec):
+            if spec == "state":
+                sel = jnp.take(src, rows, axis=ba)  # (L?, J, ...)
+                if ba == 0:
+                    return dst.at[slots].set(sel.astype(dst.dtype))
+                return dst.at[:, slots].set(sel.astype(dst.dtype))
+            # "kv": per-token lane; ring width is the leaf's own seq dim.
+            ring = dst.shape[ba + 1]
             w = src.shape[ba + 1]
+            # Canonical ring phase: lane position p holds token
+            # base + ((p - base) % ring) with base = max(len - ring, 0) —
+            # for full lanes (ring == cache_len >= len) this degenerates to
+            # token p at position p.
+            base = jnp.maximum(lengths - ring, 0)[:, None]  # (J, 1)
+            pgrid = jnp.arange(ring)[None, :]  # (1, ring)
+            tok = base + jnp.mod(pgrid - base, ring)  # (J, ring) token index
+            seq_pos = starts[:, None] + tok  # (J, ring) source row position
+            valid = pgrid < jnp.minimum(lengths, ring)[:, None]
             sel = jnp.take(src, rows, axis=ba)  # (L?, J, w, ...)
             idx = jnp.clip(seq_pos, 0, w - 1)
-            ishape = (1,) * ba + (J, self.cache_len) + \
-                (1,) * (sel.ndim - ba - 2)
+            ishape = (1,) * ba + (J, ring) + (1,) * (sel.ndim - ba - 2)
             lanes = jnp.take_along_axis(sel, idx.reshape(ishape),
-                                        axis=ba + 1)  # (L?, J, cache_len, .)
-            vshape = (1,) * ba + (J, self.cache_len) + \
-                (1,) * (lanes.ndim - ba - 2)
+                                        axis=ba + 1)  # (L?, J, ring, ...)
+            vshape = (1,) * ba + (J, ring) + (1,) * (lanes.ndim - ba - 2)
             lanes = jnp.where(valid.reshape(vshape), lanes,
                               0).astype(dst.dtype)
             # Padding entries carry slot == num_slots: out-of-bounds
@@ -116,13 +146,14 @@ class SlotKVCache:
                 return dst.at[slots].set(lanes)
             return dst.at[:, slots].set(lanes)
 
-        return jax.tree.map(per_leaf, dst_caches, src_caches)
+        return jax.tree.map(per_leaf, dst_caches, src_caches, self.specs)
 
     def assign(self, slot: int, request, src_caches, row: int, start: int,
                length: int) -> None:
-        """Claim ``slot`` for ``request``; copy its KV segment
-        ``src_caches[row, start:start+length]`` into the lane at ``[0:length]``.
-        """
+        """Claim ``slot`` for ``request``; copy its cached state — the KV
+        segment ``src_caches[row, start:start+length]`` for per-token lanes,
+        the whole ``src_caches[row]`` state for recurrent lanes — into the
+        lane."""
         self.assign_many([(slot, request, row, start, length)], src_caches)
 
     def assign_many(self, assignments: Sequence[Assignment],
@@ -130,12 +161,18 @@ class SlotKVCache:
         """Claim several slots in one fused lane copy.
 
         ``assignments`` is a list of ``(slot, request, row, start, length)``
-        drawn from ONE prefill's ``src_caches`` — rows of a packed prefill
-        interleave several requests, and segment masking made each one's
-        K/V identical to an unpacked computation, so the gathered lanes
-        decode exactly as if each request had been prefilled alone. The
-        whole admission round is a single jitted gather+scatter instead of
-        one dispatch per request.
+        drawn from ONE prefill's ``src_caches``. For per-token lanes, rows
+        of a packed prefill interleave several requests and segment masking
+        made each one's K/V identical to an unpacked computation; the source
+        must be full-length (``init_cache(..., ring=False)``) so windowed
+        segments are addressable. For recurrent state lanes the engine
+        prefills one request per row (right-aligned, padding masked to
+        identity updates), so ``src_caches[row]``'s end-of-row state is
+        exactly the request's state. Either way the gathered lanes decode
+        exactly as if each request had been prefilled alone, and the whole
+        admission round is a single jitted gather+scatter instead of one
+        dispatch per request. A reassigned lane is overwritten wholesale —
+        no state survives a release→assign cycle.
         """
         if not assignments:
             return
@@ -167,7 +204,8 @@ class SlotKVCache:
             self.request[slot] = request
 
     def advance(self, slot: int) -> None:
-        """One decoded token was written into the lane at ``lengths[slot]``."""
+        """One decoded token was written into the lane at ``lengths[slot]``
+        (``% ring`` for ring lanes; recurrent lanes updated in place)."""
         self.lengths[slot] += 1
 
     def release(self, slot: int) -> None:
@@ -176,3 +214,8 @@ class SlotKVCache:
         # blocks-visited accounting) see an empty lane, not a stale one.
         self.lengths[slot] = 0
         self.request[slot] = None
+
+
+# The class predates the recurrent/ring lane kinds; this alias is the
+# name the docs use for the generalized structure.
+SlotStateTable = SlotKVCache

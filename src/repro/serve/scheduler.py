@@ -56,23 +56,34 @@ class Request:
 class Admission:
     """One prefill sweep's worth of admitted requests.
 
-    ``packed`` is the shared-row batch for short prompts; ``None`` marks a
-    solo long prompt whose ``chunks`` concatenate back to the full prompt
-    and whose prefill width is ``len(chunks) * max_len``.
+    Three layouts:
+
+    * ``packed`` — the shared-row batch for short prompts (attention-cache
+      stacks, where segment masking makes packing exact).
+    * ``chunks`` — a solo long prompt whose ``chunks`` concatenate back to
+      the full prompt and whose prefill width is ``len(chunks) * max_len``.
+    * neither (``row_width`` set) — one request per row, emitted by a
+      no-pack scheduler (recurrent stacks: the prefill cache stores only
+      each row's end-of-sequence state, so requests cannot share a row; the
+      engine right-aligns them at width ``row_width``).
     """
 
     requests: List[Request]
     packed: Optional[PackedBatch] = None
     chunks: Optional[List[np.ndarray]] = None
+    row_width: Optional[int] = None  # row-per-request layout width
 
     @property
     def utilization(self) -> float:
         """Filled fraction of the prefill token slots this sweep."""
         if self.packed is not None:
             return float((self.packed.segment_ids > 0).mean())
-        total = sum(len(c) for c in self.chunks)
-        width = len(self.chunks) * len(self.chunks[0])
-        return total / max(width, 1)
+        if self.chunks is not None:
+            total = sum(len(c) for c in self.chunks)
+            width = len(self.chunks) * len(self.chunks[0])
+            return total / max(width, 1)
+        total = sum(len(r.prompt) for r in self.requests)
+        return total / max(len(self.requests) * self.row_width, 1)
 
 
 class Scheduler:
@@ -85,10 +96,14 @@ class Scheduler:
     """
 
     def __init__(self, max_len: int = 128, max_per_row: int = 4,
-                 max_rows: int = 8, max_prompt_len: Optional[int] = None):
+                 max_rows: int = 8, max_prompt_len: Optional[int] = None,
+                 pack: bool = True):
         self.policy = PackingPolicy(max_len=max_len, max_per_row=max_per_row)
         self.max_rows = max_rows
         self.max_prompt_len = max_prompt_len
+        # pack=False: row-per-request admissions (recurrent stacks — only
+        # the *last* segment of a packed row could recover its end state).
+        self.pack = pack
         self.queue: List[Request] = []
 
     # ------------------------------------------------------------------
@@ -111,6 +126,14 @@ class Scheduler:
 
     def next_admissions(self, free_slots: int) -> List[Admission]:
         """Admit up to ``free_slots`` queued requests as admission groups."""
+        if not self.pack:
+            take = min(free_slots, self.max_rows, len(self.queue))
+            if take <= 0:
+                return []
+            reqs = [self.queue.pop(0) for _ in range(take)]
+            ml = self.policy.max_len
+            width = max(-(-len(r.prompt) // ml) * ml for r in reqs)
+            return [Admission(requests=reqs, row_width=width)]
         groups: List[Admission] = []
         shorts: List[Request] = []
         taken = 0

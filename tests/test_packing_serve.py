@@ -1,4 +1,4 @@
-"""Dynamic batching (core/packing.py) + serve layer (batcher/engine)."""
+"""Dynamic batching (core/packing.py) + serve layer (scheduler/engine)."""
 import jax
 import numpy as np
 import pytest

@@ -1,0 +1,83 @@
+"""Docs link/path checker: keeps README.md and docs/ from rotting.
+
+Checks, with no network and no heavy imports:
+
+1. Every repo path referenced in the markdown (backtick-quoted
+   ``src/...``, ``tests/...``, ``examples/...``, ``benchmarks/...``,
+   ``docs/...``, ``experiments/...``) exists; ``::test_name`` suffixes and
+   glob-ish references are handled.
+2. Every ``python`` entry point named in a bash code fence
+   (``python -m <module>`` / ``python <script.py>``) resolves to a real
+   module or file.
+3. The tier-1 verify command documented in README is the one ROADMAP.md
+   pins (``python -m pytest``).
+
+CI pairs this with ``python -m pytest --collect-only -q`` so the
+documented command is also *executed* against the tree.
+
+  PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+PATH_RE = re.compile(
+    r"[`(]((?:src|tests|examples|benchmarks|docs|experiments|tools)/"
+    r"[A-Za-z0-9_./\-]*)")
+PY_MODULE_RE = re.compile(r"python -m ([A-Za-z0-9_.]+)")
+PY_SCRIPT_RE = re.compile(r"python ((?:[A-Za-z0-9_\-]+/)+[A-Za-z0-9_\-]+\.py)")
+
+
+def check_paths(md: pathlib.Path, text: str, errors: list) -> None:
+    for ref in PATH_RE.findall(text):
+        ref = ref.split("::")[0].rstrip("./")
+        if not ref or "*" in ref or "<" in ref:
+            continue
+        if not (ROOT / ref).exists():
+            errors.append(f"{md.name}: referenced path does not exist: {ref}")
+
+
+def check_commands(md: pathlib.Path, text: str, errors: list) -> None:
+    fences = re.findall(r"```(?:bash|sh)?\n(.*?)```", text, re.S)
+    for fence in fences:
+        for mod in PY_MODULE_RE.findall(fence):
+            top = mod.split(".")[0]
+            if top in ("pytest",):
+                continue
+            cand = [ROOT / "src" / mod.replace(".", "/"),
+                    ROOT / mod.replace(".", "/")]
+            if not any(p.with_suffix(".py").exists() or
+                       (p / "__init__.py").exists() for p in cand):
+                errors.append(f"{md.name}: `python -m {mod}` does not "
+                              "resolve under src/ or the repo root")
+        for script in PY_SCRIPT_RE.findall(fence):
+            if not (ROOT / script).exists():
+                errors.append(f"{md.name}: `python {script}` missing")
+
+
+def main() -> int:
+    errors: list = []
+    readme = (ROOT / "README.md")
+    if not readme.exists():
+        errors.append("README.md missing")
+    for md in DOC_FILES:
+        text = md.read_text()
+        check_paths(md, text, errors)
+        check_commands(md, text, errors)
+    if readme.exists() and "python -m pytest -x -q" not in readme.read_text():
+        errors.append("README.md: tier-1 verify command "
+                      "(`python -m pytest -x -q`) not documented")
+    if errors:
+        print("\n".join(errors))
+        return 1
+    print(f"docs check OK ({len(DOC_FILES)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
