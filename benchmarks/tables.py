@@ -253,8 +253,11 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
     # ---- continuous engine: same workload, same slot count. decode_block_k
     # sizes the TDA predication grid the blocks-visited accounting models
     # (the decode impl itself is backend-resolved: dense on CPU, tda on TPU).
+    # paged=False keeps this row the *contiguous* lane layout so the
+    # tracked speedup gate measures the same thing across PRs; the paged
+    # row below is the same workload through the page pool.
     eng = Engine(model, params, max_len=max_len, max_new_tokens=max_new,
-                 num_slots=num_slots, decode_block_k=32)
+                 num_slots=num_slots, decode_block_k=32, paged=False)
     for r in workload():
         eng.submit(r)
     eng.run()  # compile
@@ -267,6 +270,23 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
     blk_ratio = eng.decode_stats["kv_block_ratio"]
 
     speedup = (useful / ct_s) / (useful / ls_s)
+
+    # ---- paged lane pool: same workload, lanes allocated page-by-page
+    # behind block tables (serve/pages.py). kv_memory_ratio — mean pages in
+    # use over pool capacity — is the footprint analogue of kv_block_ratio:
+    # the contiguous layout is 1.0 by definition.
+    peng = Engine(model, params, max_len=max_len, max_new_tokens=max_new,
+                  num_slots=num_slots, decode_block_k=32, paged=True,
+                  page_size=8)
+    for r in workload():
+        peng.submit(r)
+    peng.run()  # compile
+    t0 = time.perf_counter()
+    for r in workload():
+        peng.submit(r)
+    peng.run()
+    pg_s = time.perf_counter() - t0
+    pg = peng.decode_stats
 
     # ---- the other two cache kinds through the same slot engine: a pure
     # recurrent stack (SSD state lanes — no kv blocks at all) and a
@@ -306,6 +326,9 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
             "tokens_per_s": tot / secs,
             "slot_utilization": ds["slot_utilization"],
             "kv_block_ratio": ds["kv_block_ratio"],
+            # engine default is the paged lane pool (1.0 == pure-recurrent
+            # stacks, which have no kv lanes to page)
+            "kv_memory_ratio": ds["kv_memory_ratio"],
         }
 
     rec_s, rec = engine_workload("mamba2-370m")
@@ -320,6 +343,10 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
         "kv_blocks_dense": eng.decode_stats["kv_blocks_dense"],
         "kv_block_ratio": blk_ratio,
         "decode_attn": eng.decode_attn,
+        "tokens_per_s_paged": useful / pg_s,
+        "kv_memory_ratio": pg["kv_memory_ratio"],
+        "kv_pages_total": pg["kv_pages_total"],
+        "preemptions": pg["preemptions"],
         "recurrent": rec,
         "short_window": win,
     }
@@ -334,6 +361,10 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
         ("decode/kv_blocks", 0.0,
          f"visited_ratio={blk_ratio:.2f} (predicated TDA grid vs dense "
          f"sweep, block_k=32)"),
+        ("decode/paged", pg_s * 1e6,
+         f"tok/s={useful / pg_s:.0f} kv_memory_ratio="
+         f"{pg['kv_memory_ratio']:.2f} (pages in use / pool capacity; "
+         f"contiguous=1.0) preempt={pg['preemptions']}"),
         ("decode/recurrent", rec_s * 1e6,
          f"arch={rec['arch']} tok/s={rec['tokens_per_s']:.0f} "
          f"slot_util={rec['slot_utilization']:.2f} (SSD state lanes)"),

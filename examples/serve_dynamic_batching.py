@@ -54,6 +54,13 @@ def main():
     print(f"decode: {ds['decoded_tokens']} tokens in {ds['steps']} steps, "
           f"per-step slot utilization {ds['slot_utilization']:.2f} "
           f"(the serving-side PE-utilization analogue)")
+    pool = eng.slots.pool
+    print(f"paged lane pool: {pool.total_pages} pages x "
+          f"{eng.page_size} tokens, mean occupancy "
+          f"{ds['kv_memory_ratio']:.2f} of capacity "
+          f"(contiguous lanes would pin 1.00), "
+          f"{ds['preemptions']} preemptions "
+          f"(cache footprint follows occupancy — see docs/serving.md)")
 
     # ---- same engine, recurrent + ring cache kinds (no lock-step path) ----
     rcfg = get_config("recurrentgemma-2b", "smoke")

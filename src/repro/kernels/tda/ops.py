@@ -15,9 +15,13 @@ import jax.numpy as jnp
 
 from repro.kernels.common import resolve_interpret
 from repro.kernels.tda.ref import block_stats, decode_attention_reference
-from repro.kernels.tda.tda import tda_decode_attention
+from repro.kernels.tda.tda import (
+    tda_decode_attention,
+    tda_paged_decode_attention,
+)
 
-__all__ = ["fused_decode_attention", "block_stats"]
+__all__ = ["fused_decode_attention", "gather_paged_lanes",
+           "paged_flat_positions", "block_stats"]
 
 
 def _pad_seq(x: Optional[jnp.ndarray], target: int) -> Optional[jnp.ndarray]:
@@ -26,6 +30,35 @@ def _pad_seq(x: Optional[jnp.ndarray], target: int) -> Optional[jnp.ndarray]:
     widths = [(0, 0)] * x.ndim
     widths[1] = (0, target - x.shape[1])
     return jnp.pad(x, widths)
+
+
+def paged_flat_positions(block_table: jnp.ndarray,
+                         page_size: int) -> jnp.ndarray:
+    """Expand block-table rows to flattened-pool positions: ``(R, n) ->
+    (R, n * page_size)`` with lane position ``p`` at ``bt[r, p //
+    page_size] * page_size + p % page_size``. THE paged addressing
+    contract — the lane-view gather, the assign scatter, and (in spirit)
+    the kernel's scalar-prefetch index map all speak it. Sentinel entries
+    (``FREE == num_pages``) land at ``>= num_pages * page_size``: callers
+    clamp for gathers (the garbage sits beyond every ``hi`` bound) and
+    rely on scatter-drop for writes."""
+    R, n = block_table.shape
+    return (block_table[:, :, None] * page_size
+            + jnp.arange(page_size)[None, None, :]).reshape(R, n * page_size)
+
+
+def gather_paged_lanes(pool: jnp.ndarray,
+                       block_table: jnp.ndarray) -> jnp.ndarray:
+    """Materialize per-slot lane views out of a physical page pool:
+    ``(P, page_size, ...) + (B, n) -> (B, n * page_size, ...)``. Sentinel
+    table entries clamp into range; the garbage they gather sits beyond
+    every ``hi`` bound (a slot's pages are a logical prefix), so the
+    masked softmax never reads it. This is the jnp-reference mirror of
+    what the paged kernel's scalar-prefetch index map does per block."""
+    P, ps = pool.shape[0], pool.shape[1]
+    flat = pool.reshape((P * ps,) + pool.shape[2:])
+    pos = jnp.clip(paged_flat_positions(block_table, ps), 0, P * ps - 1)
+    return jnp.take(flat, pos, axis=0)
 
 
 def fused_decode_attention(
@@ -39,6 +72,7 @@ def fused_decode_attention(
     window: Optional[int] = None,
     lut_table: Optional[jnp.ndarray] = None,  # AFU exp LUT (else exact exp)
     block_k: int = 128,
+    block_table: Optional[jnp.ndarray] = None,  # (B, n): paged lane pool
     use_kernel: bool = True,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
@@ -55,10 +89,42 @@ def fused_decode_attention(
     ordering is irrelevant to the softmax, so no per-slot offset input is
     needed. This is what :func:`repro.models.layers.attention_block` does
     on the serving decode path.
+
+    ``block_table`` selects the **paged** layout: ``k``/``v`` (and scales)
+    are physical page pools ``(P, page_size, ...)`` and
+    ``block_table[b, i]`` names the physical page backing logical kv block
+    ``i`` of slot ``b`` — one page is one kv block, read via scalar
+    prefetch (``block_k`` is ignored; the page size is the block size).
+    Bounds stay in logical lane coordinates, so the ``[lo, hi)`` contract
+    is unchanged.
     """
     squeeze = q.ndim == 4
     if squeeze:
         q = q[:, 0]
+    if block_table is not None:
+        B = q.shape[0]
+        S = block_table.shape[1] * k.shape[1]  # logical lane width
+        if not use_kernel:
+            out = decode_attention_reference(
+                q, gather_paged_lanes(k, block_table),
+                gather_paged_lanes(v, block_table), lengths,
+                k_scale=None if k_scale is None
+                else gather_paged_lanes(k_scale, block_table),
+                v_scale=None if v_scale is None
+                else gather_paged_lanes(v_scale, block_table),
+                window=window)
+            return (out.astype(q.dtype)[:, None] if squeeze
+                    else out.astype(q.dtype))
+        hi = jnp.clip(jnp.broadcast_to(jnp.reshape(lengths, (-1,)), (B,)),
+                      0, S)
+        lo = jnp.zeros_like(hi) if window is None \
+            else jnp.maximum(hi - window, 0)
+        bounds = jnp.stack([lo, hi], axis=1).astype(jnp.int32)
+        out = tda_paged_decode_attention(
+            q, k, v, bounds, block_table.astype(jnp.int32), k_scale,
+            v_scale, lut_table,
+            interpret=resolve_interpret(interpret)).astype(q.dtype)
+        return out[:, None] if squeeze else out
     if not use_kernel:
         out = decode_attention_reference(q, k, v, lengths, k_scale=k_scale,
                                          v_scale=v_scale, window=window)

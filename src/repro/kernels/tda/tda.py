@@ -33,6 +33,19 @@ The ``lut_table`` input (optional) routes the two exponentials through the
 AFU's 64-entry piecewise-linear exp — the same table
 :func:`repro.kernels.afu.ref.exp_lut_table` feeds the fused-softmax kernel —
 modelling the chip's LUT-assisted AFU on the decode path.
+
+**Paged variant** (:func:`tda_paged_decode_attention`): KV lanes live in a
+physical page pool (``serve/pages.py``) and a per-slot int32 block table
+maps logical kv block ``i`` to its physical page — one page is exactly one
+kv block. Bounds and block tables ride *scalar prefetch*
+(``pltpu.PrefetchScalarGridSpec``) so the K/V block specs can DMA the
+right physical page before the kernel body runs; everything else — the
+``[lo, hi)`` predication over **logical** block positions, online softmax,
+in-VMEM int8 dequant — is byte-identical to the contiguous kernel (the
+two share one body). Unallocated table entries carry an out-of-bounds
+sentinel; their logical blocks always sit outside ``[lo, hi)`` (a slot's
+pages are a logical prefix), so predication skips them and the index map
+only has to clamp.
 """
 from __future__ import annotations
 
@@ -48,7 +61,7 @@ from repro.kernels.afu.ref import LUT_SIZE, lut_exp
 
 NEG_INF = -1e30
 
-__all__ = ["tda_decode_attention"]
+__all__ = ["tda_decode_attention", "tda_paged_decode_attention"]
 
 
 def _exp(x, table):
@@ -60,14 +73,12 @@ def _exp(x, table):
     return lut_exp(x, table)
 
 
-def _tda_kernel(bounds_ref, q_ref, k_ref, v_ref, *rest,
-                bk: int, groups: int, quant: bool, lut: bool):
-    rest = list(rest)
-    ks_ref = rest.pop(0) if quant else None
-    vs_ref = rest.pop(0) if quant else None
-    table = rest.pop(0)[...] if lut else None
-    o_ref, o_acc, m_acc, l_acc = rest
-
+def _tda_body(lo, hi, q_ref, k_ref, v_ref, ks_ref, vs_ref, table,
+              o_ref, o_acc, m_acc, l_acc, *, bk: int, groups: int,
+              quant: bool):
+    """Shared kernel body: init / predicated online-softmax block / finish.
+    The contiguous and paged kernels differ only in how ``lo``/``hi`` (and
+    the K/V blocks) reach the grid step; the math is this one function."""
     ki = pl.program_id(1)
     nk = pl.num_programs(1)
 
@@ -77,8 +88,6 @@ def _tda_kernel(bounds_ref, q_ref, k_ref, v_ref, *rest,
         m_acc[...] = jnp.full_like(m_acc, NEG_INF)
         l_acc[...] = jnp.zeros_like(l_acc)
 
-    lo = bounds_ref[0, 0]
-    hi = bounds_ref[0, 1]
     blk0 = ki * bk
 
     # Predication: a block is visited only if it intersects the slot's
@@ -122,6 +131,36 @@ def _tda_kernel(bounds_ref, q_ref, k_ref, v_ref, *rest,
         # Never-attended lanes (hi <= lo) keep l == 0 -> output zeros.
         o_ref[0] = (o_acc[...] /
                     jnp.maximum(l_acc[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _tda_kernel(bounds_ref, q_ref, k_ref, v_ref, *rest,
+                bk: int, groups: int, quant: bool, lut: bool):
+    rest = list(rest)
+    ks_ref = rest.pop(0) if quant else None
+    vs_ref = rest.pop(0) if quant else None
+    table = rest.pop(0)[...] if lut else None
+    o_ref, o_acc, m_acc, l_acc = rest
+    _tda_body(bounds_ref[0, 0], bounds_ref[0, 1], q_ref, k_ref, v_ref,
+              ks_ref, vs_ref, table, o_ref, o_acc, m_acc, l_acc,
+              bk=bk, groups=groups, quant=quant)
+
+
+def _tda_paged_kernel(bounds_ref, bt_ref, q_ref, k_ref, v_ref, *rest,
+                      bk: int, groups: int, quant: bool, lut: bool):
+    """Paged grid step: bounds arrive as a scalar-prefetch ref (indexed by
+    the slot program id — the block table prefetch ref is consumed by the
+    K/V index maps, not the body); predication still runs over *logical*
+    block positions, so the body is shared with the contiguous kernel."""
+    del bt_ref  # consumed by the in_specs index maps
+    rest = list(rest)
+    ks_ref = rest.pop(0) if quant else None
+    vs_ref = rest.pop(0) if quant else None
+    table = rest.pop(0)[...] if lut else None
+    o_ref, o_acc, m_acc, l_acc = rest
+    b = pl.program_id(0)
+    _tda_body(bounds_ref[b, 0], bounds_ref[b, 1], q_ref, k_ref, v_ref,
+              ks_ref, vs_ref, table, o_ref, o_acc, m_acc, l_acc,
+              bk=bk, groups=groups, quant=quant)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
@@ -172,5 +211,77 @@ def tda_decode_attention(q, k, v, bounds, k_scale=None, v_scale=None,
             pltpu.VMEM((Hq, 1), jnp.float32),  # running max
             pltpu.VMEM((Hq, 1), jnp.float32),  # running denominator
         ],
+        interpret=interpret,
+    )(*args)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tda_paged_decode_attention(q, k, v, bounds, block_table, k_scale=None,
+                               v_scale=None, lut_table=None, *,
+                               interpret: bool = True) -> jnp.ndarray:
+    """Fused slot-decode attention over a paged KV lane pool.
+
+    q (B, Hq, D); k/v are physical page pools (P, page_size, Hkv, D) — fp
+    or int8 codes (then ``k_scale``/``v_scale`` (P, page_size, Hkv) must be
+    given); bounds (B, 2) int32 per-slot ``[lo, hi)`` spans in *logical*
+    lane coordinates; block_table (B, n) int32 maps logical kv block ``i``
+    of slot ``b`` to its physical page (one page = one kv block;
+    ``block_k == page_size``). Entries whose logical block lies outside
+    ``[lo, hi)`` may carry any value — including the allocator's
+    out-of-bounds FREE sentinel — because predication skips them; the
+    index map clamps so the prefetch itself stays in range. Returns
+    (B, Hq, D) f32.
+    """
+    B, Hq, D = q.shape
+    P, ps, Hkv = k.shape[0], k.shape[1], k.shape[2]
+    nk = block_table.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    quant = k_scale is not None
+    lut = lut_table is not None
+
+    def page(b, kb, bounds_ref, bt_ref):
+        return jnp.clip(bt_ref[b, kb], 0, P - 1)
+
+    in_specs = [
+        pl.BlockSpec((1, Hq, D), lambda b, kb, bounds, bt: (b, 0, 0)),
+        pl.BlockSpec((1, ps, Hkv, D),
+                     lambda b, kb, bounds, bt: (page(b, kb, bounds, bt),
+                                                0, 0, 0)),
+        pl.BlockSpec((1, ps, Hkv, D),
+                     lambda b, kb, bounds, bt: (page(b, kb, bounds, bt),
+                                                0, 0, 0)),
+    ]
+    args = [bounds, block_table, q, k, v]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, ps, Hkv),
+                         lambda b, kb, bounds, bt: (page(b, kb, bounds, bt),
+                                                    0, 0)),
+            pl.BlockSpec((1, ps, Hkv),
+                         lambda b, kb, bounds, bt: (page(b, kb, bounds, bt),
+                                                    0, 0)),
+        ]
+        args += [k_scale, v_scale]
+    if lut:
+        in_specs.append(pl.BlockSpec((LUT_SIZE,),
+                                     lambda b, kb, bounds, bt: (0,)))
+        args.append(lut_table)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # bounds + block table ride SMEM prefetch
+        grid=(B, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, Hq, D), lambda b, kb, bounds, bt: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hq, D), jnp.float32),  # o accumulator
+            pltpu.VMEM((Hq, 1), jnp.float32),  # running max
+            pltpu.VMEM((Hq, 1), jnp.float32),  # running denominator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_tda_paged_kernel, bk=ps, groups=Hq // Hkv,
+                          quant=quant, lut=lut),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), jnp.float32),
         interpret=interpret,
     )(*args)

@@ -30,7 +30,7 @@ from repro.core.factorized import (
     init_linear,
 )
 from repro.kernels.common import resolve_decode_attn
-from repro.kernels.tda.ops import fused_decode_attention
+from repro.kernels.tda.ops import fused_decode_attention, gather_paged_lanes
 from repro.models.common import ModelConfig
 
 NEG_INF = -1e30
@@ -326,6 +326,7 @@ def decode_attention(
     v_scale: Optional[jnp.ndarray] = None,
     impl: str = "dense",
     block_k: int = 128,
+    block_table: Optional[jnp.ndarray] = None,  # (B, n) paged lane pool
 ) -> jnp.ndarray:
     """Single-token attention against a (possibly ring-buffered) KV cache.
 
@@ -341,11 +342,19 @@ def decode_attention(
     blocks and int8 codes (``k_scale``/``v_scale`` given) dequantize in
     VMEM. ``impl="dense"`` is this jnp path — with scales it dequantizes
     the whole cache first, which the kernel exists to avoid.
+
+    ``block_table`` switches the tda path to the **paged lane pool**
+    layout: ``k_cache``/``v_cache`` are then ``(P, page_size, Hkv, D)``
+    physical page pools and ``block_table[b, i]`` names the physical page
+    holding logical kv block ``i`` of slot ``b`` (one page = one kv
+    block); the kernel reads it by scalar prefetch. Bounds semantics are
+    unchanged.
     """
     if impl == "tda":
         return fused_decode_attention(
             q, k_cache, v_cache, cache_index, k_scale=k_scale,
-            v_scale=v_scale, window=window, block_k=block_k)
+            v_scale=v_scale, window=window, block_k=block_k,
+            block_table=block_table)
     if k_scale is not None:
         k_cache = k_cache.astype(jnp.float32) * k_scale[..., None]
         v_cache = v_cache.astype(jnp.float32) * v_scale[..., None]
@@ -404,6 +413,9 @@ def attention_block(
     cache_index: Optional[jnp.ndarray] = None,  # scalar or (B,) int32
     slot_mask: Optional[jnp.ndarray] = None,  # (B,) bool: rows allowed to
     # write their decode KV (inactive serving slots keep their lane intact)
+    pages: Optional[Dict] = None,  # paged decode (engine-only): {"bt":
+    # (B, n) int32 block table, "width": logical lane width (static int),
+    # "page_size": static int}; cache leaves are then physical page pools
     layer_idx: Optional[jnp.ndarray] = None,  # set when cache is L-stacked
     kv: Optional[jnp.ndarray] = None,  # cross-attention memory (B, Skv, d)
     seg_kv: Optional[jnp.ndarray] = None,
@@ -450,7 +462,80 @@ def attention_block(
     new_cache = None
     ring = cache["k"].shape[-3] if cache is not None else 0
     quant = cache is not None and "k_scale" in cache
-    if cache is not None and S == 1:
+    if cache is not None and S == 1 and pages is not None:
+        # ---- paged decode: lanes live in a page pool (serve/pages.py) ----
+        # Logical lane coordinates are the contiguous layout's (canonical
+        # ring phase, [lo, hi) bounds); only the *physical* home of logical
+        # page ``p // page_size`` is indirected through the block table.
+        ps = pages["page_size"]
+        ringw = pages["width"]  # logical lane width (static int)
+        bt = pages["bt"]        # (B, n) int32; FREE sentinel == num_pages
+        P = cache["k"].shape[-4]  # physical pages in this leaf's pool
+
+        pos = cache_index if window is None else cache_index % ringw
+        pos = jnp.reshape(pos, (-1,))
+        page = jnp.take_along_axis(bt, (pos // ps)[:, None], axis=1)[:, 0]
+        phys = page * ps + pos % ps
+        if slot_mask is not None:
+            # Inactive slots (and unallocated sentinel pages) land out of
+            # bounds — the scatter drops them, the lane stays untouched.
+            phys = jnp.where(jnp.reshape(slot_mask, (-1,)), phys, P * ps)
+
+        def paged_write(buf, new):
+            lv = layer_view(buf)  # (P, ps, ...)
+            lvf = lv.reshape((P * ps,) + lv.shape[2:])
+            lvf = lvf.at[phys].set(new.astype(buf.dtype), mode="drop")
+            lv2 = lvf.reshape(lv.shape)
+            if layer_idx is None:
+                return lv2
+            return jax.lax.dynamic_update_slice(
+                buf, lv2[None], (layer_idx,) + (0,) * lv2.ndim)
+
+        impl = resolve_decode_attn(cfg.decode_attn)
+        if slot_mask is not None:
+            cache_index = jnp.where(jnp.reshape(slot_mask, (-1,)),
+                                    cache_index, -1)
+        if quant:
+            kq, ksc = kv_quantize(k)
+            vq, vsc = kv_quantize(v)
+            new_cache = {"k": paged_write(cache["k"], kq[:, 0]),
+                         "v": paged_write(cache["v"], vq[:, 0]),
+                         "k_scale": paged_write(cache["k_scale"], ksc[:, 0]),
+                         "v_scale": paged_write(cache["v_scale"], vsc[:, 0])}
+        else:
+            new_cache = {"k": paged_write(cache["k"], k[:, 0]),
+                         "v": paged_write(cache["v"], v[:, 0])}
+        # Ring lanes: every position < min(cache_index+1, ring) is valid
+        # (canonical ring phase) — same bounds as the contiguous layout.
+        hi = cache_index + 1 if window is None \
+            else jnp.minimum(cache_index + 1, ringw)
+        if impl == "tda":
+            # The kernel consumes the page pools directly: the block table
+            # rides scalar prefetch and one page is one kv block.
+            kcs = vcs = None
+            if quant:
+                kcs = layer_view(new_cache["k_scale"])
+                vcs = layer_view(new_cache["v_scale"])
+            o = decode_attention(
+                q, layer_view(new_cache["k"]), layer_view(new_cache["v"]),
+                hi, k_scale=kcs, v_scale=vcs, impl="tda",
+                block_k=cfg.decode_block_k, block_table=bt)
+        else:
+            # Dense path: gather each slot's lane view out of the pool
+            # (same data volume as reading a dense lane), then attend.
+            def lanes(buf):
+                return gather_paged_lanes(layer_view(buf), bt)
+
+            if quant:
+                kc = kv_dequantize(lanes(new_cache["k"]),
+                                   lanes(new_cache["k_scale"]), dt)
+                vc = kv_dequantize(lanes(new_cache["v"]),
+                                   lanes(new_cache["v_scale"]), dt)
+            else:
+                kc, vc = lanes(new_cache["k"]), lanes(new_cache["v"])
+            o = decode_attention(q, kc, vc, hi, impl="dense")
+        o = o.reshape(B, S, cfg.n_heads * hd)
+    elif cache is not None and S == 1:
         # Decode: write this step's K/V at cache_index (ring for windowed).
         # The slot write is a one-hot select over S — a dynamic-update-slice
         # at a traced slot on the sharded S axis would force GSPMD to gather

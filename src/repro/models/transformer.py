@@ -125,7 +125,7 @@ class Model:
 
     def _block(self, lp: Dict, x: jnp.ndarray, kind: str, *, dicts, positions,
                seg_ids, cache_l, cache_index, mesh, sparse_train,
-               layer_idx=None, slot_mask=None):
+               layer_idx=None, slot_mask=None, pages_l=None):
         cfg = self.cfg
         aux = jnp.float32(0.0)
         new_cache = None
@@ -136,7 +136,8 @@ class Model:
                 lp["attn"], h, cfg=cfg, dicts=dicts, positions=positions,
                 seg_ids=seg_ids, window=window, cache=cache_l,
                 cache_index=cache_index, slot_mask=slot_mask,
-                layer_idx=layer_idx, sparse_train=sparse_train, mesh=mesh)
+                layer_idx=layer_idx, pages=pages_l,
+                sparse_train=sparse_train, mesh=mesh)
             x = x + a_out
             h2 = L.apply_norm(lp["norm2"], x)
             if cfg.moe is not None:
@@ -182,13 +183,16 @@ class Model:
 
     def _stack_forward(self, params, x, *, dicts, positions, seg_ids, caches,
                        cache_index, mesh, sparse_train, unroll=False,
-                       slot_mask=None):
-        """Run the block stack; returns (x, new_caches, aux)."""
+                       slot_mask=None, pages=None):
+        """Run the block stack; returns (x, new_caches, aux). ``pages`` is
+        the paged-decode block-table info: one entry shared by every layer
+        of a uniform stack, or ``{layer_name: entry-or-None}`` for
+        heterogeneous stacks (recurrent layers carry ``None``)."""
         cfg = self.cfg
         if cfg.uniform_layers and unroll:
             # Unrolled layer loop (decode): tiny graphs; static layer indices
             # keep every cache update a local in-place DUS — the scanned
-            # carry otherwise copies the whole stacked cache each layer
+            # carry otherwise copies the whole stacked cache every layer
             # (§Perf cell C).
             kind = cfg.block_kind(0)
             aux = jnp.float32(0.0)
@@ -200,7 +204,7 @@ class Model:
                     seg_ids=seg_ids, cache_l=cur_caches,
                     cache_index=cache_index, mesh=mesh,
                     sparse_train=sparse_train, layer_idx=i,
-                    slot_mask=slot_mask)
+                    slot_mask=slot_mask, pages_l=pages)
                 aux = aux + aux_l
             return x, cur_caches, aux
         if cfg.uniform_layers:
@@ -222,7 +226,7 @@ class Model:
                     seg_ids=seg_ids, cache_l=cache_arg,
                     cache_index=cache_index, mesh=mesh,
                     sparse_train=sparse_train, layer_idx=li,
-                    slot_mask=slot_mask)
+                    slot_mask=slot_mask, pages_l=pages)
                 if caches is None:
                     return (xc, aux + aux_l), None
                 return (xc, aux + aux_l, new_cache), None
@@ -243,11 +247,12 @@ class Model:
         for i in range(cfg.n_layers):
             name = f"layer_{i:02d}"
             cache_l = caches[name] if caches is not None else None
+            pages_l = pages.get(name) if pages is not None else None
             blk = functools.partial(
                 self._block, kind=cfg.block_kind(i), dicts=dicts,
                 positions=positions, seg_ids=seg_ids, cache_l=cache_l,
                 cache_index=cache_index, mesh=mesh, sparse_train=sparse_train,
-                slot_mask=slot_mask)
+                slot_mask=slot_mask, pages_l=pages_l)
             if cfg.remat != "none":
                 policy = getattr(jax.checkpoint_policies, cfg.remat)
                 blk = jax.checkpoint(blk, policy=policy, static_argnums=())
@@ -392,8 +397,8 @@ class Model:
 
     def decode_step(self, params: Dict, batch: Dict, caches,
                     cache_index: jnp.ndarray, *, mesh=None,
-                    slot_mask: Optional[jnp.ndarray] = None
-                    ) -> Tuple[jnp.ndarray, Any]:
+                    slot_mask: Optional[jnp.ndarray] = None,
+                    pages=None) -> Tuple[jnp.ndarray, Any]:
         """One-token step. batch: {"inputs": (B,1)} or {"embeds": (B,1,d)}.
 
         ``cache_index`` is either a scalar (lock-step decode: every row at
@@ -402,6 +407,14 @@ class Model:
         there). ``slot_mask`` (``(B,)`` bool) marks rows whose cache may be
         written — inactive serving slots keep their KV lanes untouched so a
         freshly admitted request never sees a stale write.
+
+        ``pages`` selects the paged cache layout (``serve/pages.py``):
+        attention cache leaves are then physical page pools and each
+        attention layer's entry — ``{"bt": (B, n) int32 block table,
+        "width": logical lane width, "page_size": int}``, one shared entry
+        for uniform stacks or ``{layer_name: entry-or-None}`` otherwise —
+        routes the token write through ``bt[b, pos // page_size]``.
+        ``cache_index``/``slot_mask`` semantics are unchanged.
         """
         cfg = self.cfg
         ref = batch["embeds"] if cfg.external_embeddings else batch["inputs"]
@@ -414,7 +427,7 @@ class Model:
             params, x, dicts=dicts, positions=positions, seg_ids=None,
             caches=caches, cache_index=ci, mesh=mesh,
             sparse_train=False, unroll=cfg.unroll_decode,
-            slot_mask=slot_mask)
+            slot_mask=slot_mask, pages=pages)
         x = L.apply_norm(params["final_norm"], x)
         logits = L.lm_logits(params["lm_head"], params["embed"], x, cfg)
         return logits, new_caches

@@ -14,16 +14,28 @@ Architecture:
   windowed KV (canonical ring phase), and fixed-shape recurrent states
   (RG-LRU / SSD). Per-step slot occupancy is the serving analogue of the
   paper's PE utilization.
+* :mod:`repro.serve.pages` — ``PagePool``: attention lanes paged into
+  ``page_size``-token physical pages behind per-slot int32 block tables,
+  so cache *memory* scales with occupancy (the paper's reduced external
+  memory access) the way the TDA kernel makes compute scale. The pool's
+  ``memory_ratio`` is the footprint counterpart of the blocks-visited
+  ratio.
+* :mod:`repro.serve.sampling` — in-graph temperature/top-k sampling with
+  per-(request, position) PRNG keys; greedy (``temperature=0``) stays the
+  bit-identical default.
 * :mod:`repro.serve.engine` — ``Engine``: prefill → lane assign → one
-  jitted decode step over all slots per token, with mid-decode admissions
-  and per-request stop conditions, for every ``configs/`` architecture
-  (the lock-step fallback is gone).
+  jitted decode step over all slots per token, with mid-decode admissions,
+  per-request stop conditions, page-budget admission and
+  preempt-and-requeue when the pool exhausts, for every ``configs/``
+  architecture (the lock-step fallback is gone).
 
-See ``docs/serving.md`` for the slot-engine lifecycle and the benchmark
-sidecar contract.
+See ``docs/serving.md`` for the slot-engine lifecycle, the page-table
+contract and the benchmark sidecar contract.
 """
 from repro.serve.engine import Engine  # noqa: F401
 from repro.serve.kv_slots import SlotKVCache, SlotStateTable  # noqa: F401
+from repro.serve.pages import PagePool  # noqa: F401
+from repro.serve.sampling import sample_tokens  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
     Admission,
     DynamicBatcher,
@@ -31,5 +43,6 @@ from repro.serve.scheduler import (  # noqa: F401
     Scheduler,
 )
 
-__all__ = ["Engine", "SlotKVCache", "SlotStateTable", "Scheduler",
-           "DynamicBatcher", "Request", "Admission"]
+__all__ = ["Engine", "SlotKVCache", "SlotStateTable", "PagePool",
+           "sample_tokens", "Scheduler", "DynamicBatcher", "Request",
+           "Admission"]

@@ -24,17 +24,34 @@ the lock-step fallback those stacks used to take is gone):
    lanes (ring lanes land in canonical ring phase), the end-of-row state
    for recurrent lanes.
 3. **Continuous decode**: every step is ONE jitted fixed-shape call over all
-   ``num_slots`` lanes — per-slot cache indices, active-slot masking, greedy
-   argmax inside the graph — so the only host traffic per step is a single
-   ``(num_slots,)`` token fetch, not a round-trip per request per token.
-   Finished requests (per-request ``max_new_tokens`` or ``eos_id``) release
-   their slot; freed slots are refilled from the queue *mid-decode*, keeping
-   the slot table — the serving analogue of the paper's PE array — full.
+   ``num_slots`` lanes — per-slot cache indices, active-slot masking, and
+   the next-token choice (greedy argmax, or temperature/top-k sampling with
+   per-slot PRNG keys when ``temperature > 0``) inside the graph — so the
+   only host traffic per step is a single ``(num_slots,)`` token fetch, not
+   a round-trip per request per token. Finished requests (per-request
+   ``max_new_tokens`` or ``eos_id``) release their slot; freed slots are
+   refilled from the queue *mid-decode*, keeping the slot table — the
+   serving analogue of the paper's PE array — full.
+
+**Paged KV lanes** (default for attention stacks): attention cache lanes
+live in a :class:`~repro.serve.pages.PagePool` of ``page_size``-token
+physical pages behind per-slot block tables, so cache *memory* scales with
+occupancy the same way the TDA kernel's ``[lo, hi)`` predication makes
+compute scale — the serving analogue of the paper's reduced external
+memory access. The scheduler admits on free **pages** (not just free
+slots); if the pool still exhausts mid-decode (lanes grow a page at a
+time), the engine preempts the youngest request and requeues it as a
+continuation — prompt + generated-so-far — whose resumed decode is
+token-identical to an uninterrupted run (greedy trivially; sampled decode
+because step keys derive from absolute position, see
+``serve/sampling.py``). ``paged=False`` keeps the dense contiguous lanes.
 
 ``stats`` records one entry per prefill sweep (legacy keys ``rows`` /
 ``n_requests`` / ``utilization``); ``decode_stats`` aggregates the per-step
-slot utilization, token counts and the predicated-attention blocks-visited
-accounting after :meth:`run`.
+slot utilization, token counts, the predicated-attention blocks-visited
+accounting, and — in paged mode — ``kv_memory_ratio`` (mean pages in use
+over pool capacity, the footprint metric) and ``preemptions`` after
+:meth:`run`.
 """
 from __future__ import annotations
 
@@ -48,6 +65,7 @@ from repro.kernels.common import resolve_decode_attn
 from repro.kernels.tda.ref import block_stats
 from repro.models.transformer import Model
 from repro.serve.kv_slots import SlotKVCache
+from repro.serve.sampling import sample_tokens
 from repro.serve.scheduler import Admission, Request, Scheduler
 
 __all__ = ["Engine"]
@@ -61,7 +79,11 @@ class Engine:
                  max_prompt_len: Optional[int] = None,
                  eos_id: Optional[int] = None, max_rows: int = 8,
                  decode_attn: str = "auto",
-                 decode_block_k: Optional[int] = None):
+                 decode_block_k: Optional[int] = None,
+                 paged: bool = True, page_size: Optional[int] = None,
+                 pool_frac: float = 1.0,
+                 temperature: float = 0.0, top_k: Optional[int] = None,
+                 seed: int = 0):
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -69,12 +91,16 @@ class Engine:
         self.mesh = mesh
         self.eos_id = eos_id
         self.num_slots = num_slots
+        self.temperature = float(temperature)
+        self.top_k = top_k
+        self._base_seed = int(seed)
         # Cache lanes must hold the longest admissible prompt plus the
         # decode budget; prompts up to 2*max_len are admitted by default via
         # the chunking path (raise max_prompt_len for longer traffic).
         self.max_prompt_len = max_prompt_len or 2 * max_len
         self.cache_len = self.max_prompt_len + self.max_new
         kinds = {model.cfg.block_kind(i) for i in range(model.cfg.n_layers)}
+        has_attn = bool(kinds & {"attn", "local"})
         # Recurrent prefill caches hold one end-of-sequence state per row,
         # so those stacks admit one request per row (no intra-row packing);
         # the weight sweep is still shared across the admitted rows.
@@ -82,7 +108,6 @@ class Engine:
         self.scheduler = Scheduler(max_len=max_len, max_rows=max_rows,
                                    max_prompt_len=self.max_prompt_len,
                                    pack=not self._recurrent)
-        self.slots = SlotKVCache(model, num_slots, self.cache_len)
         # SSD's chunked scan needs prefill widths that are chunk multiples.
         self._ssd_chunk = model.cfg.ssm.chunk \
             if "ssd" in kinds and model.cfg.ssm else None
@@ -91,15 +116,47 @@ class Engine:
         # (interpret-mode Pallas on CPU would lose to one einsum). Prefill
         # always runs on the original model — flash attention is unaffected.
         self.decode_attn = resolve_decode_attn(decode_attn) \
-            if kinds & {"attn", "local"} else "dense"
+            if has_attn else "dense"
         dmodel = model.with_decode_attn(self.decode_attn, decode_block_k)
         self._block_k = dmodel.cfg.decode_block_k
+        # Paged lane pool: only attention lanes page (recurrent state lanes
+        # are fixed-shape); one page is one TDA kv block, so the default
+        # page size is the predication block size.
+        self.paged = bool(paged) and has_attn
+        self.page_size = (page_size or self._block_k) if self.paged else None
+        if self.paged:
+            self._block_k = self.page_size  # grid == pages: keep stats honest
+        self.slots = SlotKVCache(model, num_slots, self.cache_len,
+                                 page_size=self.page_size,
+                                 pool_frac=pool_frac)
+        # Static layer -> lane-width map for the paged decode step: one
+        # width for uniform stacks, per-layer (None on recurrent layers)
+        # otherwise. Derived from the slot table's per-leaf widths — the
+        # same source the pool's block-table keys come from — so the
+        # tables[w] lookup in decode_fn cannot drift out of sync.
+        self._page_struct = None
+        if self.paged:
+            def layer_width(spec):
+                ws = {w for w in jax.tree.leaves(spec) if w > 0}
+                assert len(ws) <= 1, f"mixed widths in one layer: {ws}"
+                return ws.pop() if ws else None
+            if model.cfg.uniform_layers:
+                self._page_struct = layer_width(self.slots.widths)
+            else:
+                self._page_struct = {
+                    name: layer_width(spec)
+                    for name, spec in self.slots.widths.items()}
         # Distinct attention-lane shapes for the blocks-visited accounting:
         # one (ring, block_k) descriptor per distinct window among the
         # attention layers (pure-recurrent stacks have none).
         self._attn_rings = sorted({
             model._block_ring(k, self.cache_len)
             for k in kinds if k in ("attn", "local")})
+        # Per-slot sampling seeds + admission order (preemption victims are
+        # youngest-first, vLLM-style, so older requests always progress).
+        self._seeds = np.zeros(num_slots, np.uint32)
+        self._admit_seq = np.zeros(num_slots, np.int64)
+        self._seq = 0
         self.stats: List[Dict] = []  # one entry per prefill sweep
         self.decode_stats: Dict = {}
 
@@ -113,11 +170,30 @@ class Engine:
                 mesh=mesh)
             return logits, new_caches
 
-        def decode_fn(params, tokens, caches, lengths, active):
+        def decode_fn(params, tokens, caches, lengths, active, seeds,
+                      tables):
+            pages = None
+            if self.paged:
+                def entry(w):
+                    return {"bt": tables[w][:num_slots], "width": w,
+                            "page_size": self.page_size}
+                if isinstance(self._page_struct, dict):
+                    pages = {name: (entry(w) if w is not None else None)
+                             for name, w in self._page_struct.items()}
+                else:
+                    pages = entry(self._page_struct)
             logits, new_caches = dmodel.decode_step(
                 params, {"inputs": tokens}, caches, lengths,
-                slot_mask=active, mesh=mesh)
-            nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+                slot_mask=active, pages=pages, mesh=mesh)
+            row = logits[:, 0, :]
+            if self.temperature > 0:
+                # The drawn token's absolute position is lengths + 1: the
+                # same (request, position) key a preempted-then-resumed
+                # request re-derives at its prefill (serve/sampling.py).
+                nxt = sample_tokens(row, seeds, lengths + 1,
+                                    self.temperature, self.top_k)
+            else:
+                nxt = jnp.argmax(row, axis=-1).astype(jnp.int32)
             return nxt, new_caches
 
         # One compile per prefill shape — widths are max_len multiples and
@@ -128,10 +204,24 @@ class Engine:
         donate = (2,) if jax.default_backend() != "cpu" else ()
         self._prefill = jax.jit(prefill_fn)
         self._decode = jax.jit(decode_fn, donate_argnums=donate)
+        if self.temperature > 0:
+            t, tk = self.temperature, self.top_k
+
+            def sample1(row, seed, pos):
+                return sample_tokens(row[None], seed[None], pos[None],
+                                     t, tk)[0]
+
+            # First tokens come from prefill logits on the host; one jit of
+            # the very same sampling fn keeps them bit-identical to decode.
+            self._sample1 = jax.jit(sample1)
 
     # ------------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        # No page-capacity check needed: PagePool floors every width class
+        # at one full lane's pages, so a lone max-size request always fits
+        # (tests/test_pages.py::test_pool_floor_fits_one_max_size_request);
+        # the scheduler's cache-capacity bound is the only hard reject.
         self.scheduler.submit(req)
 
     def run(self) -> List[Request]:
@@ -147,8 +237,19 @@ class Engine:
         decoded_tokens = 0
         blocks_visited = 0
         blocks_dense = 0
+        preemptions = 0
+        pages_used_steps = 0
 
         while self.scheduler.pending() or sl.active.any():
+            if self.paged:
+                # Lanes grow one page at a time; make every active slot's
+                # next write position resident, preempting the youngest
+                # request(s) when the pool runs dry. Growth runs BEFORE
+                # admission so a fresh admission can only reserve pages the
+                # in-flight lanes don't need this step — together with
+                # assign_many's one-ahead allocation, an admitted request
+                # always survives to its first decode step.
+                preemptions += self._ensure_pages()
             if self.scheduler.pending():
                 free = sl.free_slots()
                 if free.size:
@@ -169,12 +270,16 @@ class Engine:
                 blocks_visited += bs["visited"]
                 blocks_dense += bs["dense"]
 
+            tables = sl.pool.device_tables() if self.paged else {}
             nxt, sl.caches = self._decode(
                 self.params, jnp.asarray(cur[:, None]), sl.caches,
-                jnp.asarray(sl.lengths), jnp.asarray(sl.active))
+                jnp.asarray(sl.lengths), jnp.asarray(sl.active),
+                jnp.asarray(self._seeds), tables)
             nxt = np.asarray(nxt)  # the step's single host sync
             steps += 1
             active_slot_steps += active_ix.size
+            if self.paged:
+                pages_used_steps += sl.pool.pages_in_use()
             for s in active_ix:
                 sl.advance(s)
                 tok = int(nxt[s])
@@ -195,37 +300,111 @@ class Engine:
             "kv_blocks_visited": blocks_visited,
             "kv_blocks_dense": blocks_dense,
             "kv_block_ratio": blocks_visited / max(blocks_dense, 1),
+            "paged": self.paged,
+            "preemptions": preemptions,
+            # Footprint analogue of kv_block_ratio: mean fraction of the
+            # page pool actually holding tokens (contiguous lanes allocate
+            # everything up front — ratio 1.0 by definition).
+            "kv_pages_total": sl.pool.total_pages if self.paged else 0,
+            "kv_memory_ratio": (
+                pages_used_steps / max(steps * sl.pool.total_pages, 1)
+                if self.paged else 1.0),
         }
         return done
+
+    # ------------------------------------------------------------------
+
+    def _ensure_pages(self) -> int:
+        """Page in every active slot's next write position (oldest request
+        first). When the pool is dry, preempt-and-requeue the *youngest*
+        active request until the write fits; returns the preemption count.
+        The oldest request can always make progress: if it holds the only
+        pages left, its own lane is already fully resident."""
+        sl, pool = self.slots, self.slots.pool
+        n_preempt = 0
+        order = sorted(np.flatnonzero(sl.active),
+                       key=lambda s: self._admit_seq[s])
+        for s in order:
+            if not sl.active[s]:
+                continue  # preempted as a victim earlier in this pass
+            while not pool.ensure_write(int(s), int(sl.lengths[s])):
+                victims = np.flatnonzero(sl.active)
+                victim = int(max(victims, key=lambda v: self._admit_seq[v]))
+                if victim == s and victims.size == 1:
+                    raise RuntimeError(
+                        "page pool too small for a single in-flight request")
+                self._preempt(victim)
+                n_preempt += 1
+                if victim == s:
+                    break
+        return n_preempt
+
+    def _preempt(self, slot: int) -> None:
+        """Requeue the slot's request as a continuation: its prompt plus
+        everything generated so far, at the queue head. Re-prefilling that
+        sequence yields exactly the token the next decode step would have
+        produced (greedy is deterministic; sampled decode keys on absolute
+        position), so preemption is invisible in the output stream."""
+        req = self.slots.request[slot]
+        cont = Request(
+            rid=req.rid,
+            prompt=np.concatenate([np.asarray(req.prompt, np.int32),
+                                   np.asarray(req.output, np.int32)]),
+            max_new_tokens=req.max_new_tokens, seed=req.seed)
+        cont._origin = req  # type: ignore[attr-defined]
+        self.scheduler.requeue(cont)
+        self.slots.release(slot)  # returns the lane's pages to the pool
 
     # ------------------------------------------------------------------
 
     def _admit(self, free: np.ndarray, cur, emitted, budget,
                done: List[Request]) -> None:
         """Prefill one round of admissions into the free slots."""
-        groups = self.scheduler.next_admissions(len(free))
+        pool = self.slots.pool if self.paged else None
+        # Reservation is per width class and one token ahead; assign_many
+        # allocates that one-ahead page for real (kv_slots.py), and the run
+        # loop grows active lanes *before* admitting, so a fresh admission
+        # neither overcommits a class nor steals a page an in-flight lane
+        # needs this step — it always reaches its first decode step.
+        groups = self.scheduler.next_admissions(
+            len(free), reserve=pool.reserver() if pool else None)
         fi = 0
         for adm in groups:
             logits, caches, slots_of = self._prefill_admission(adm)
             logits = np.asarray(logits)
             assigns = []  # whole group lands in ONE fused lane copy
             for i, req in enumerate(adm.requests):
+                # A requeued continuation carries its original request in
+                # _origin: tokens and budgets accrue there, and the caller
+                # gets the object it submitted back.
+                target = getattr(req, "_origin", req)
                 row, start, length = slots_of[i]
-                req_budget = min(req.max_new_tokens, self.max_new)
-                if req_budget <= 0:
-                    done.append(req)  # nothing requested; no token emitted
+                total_budget = min(target.max_new_tokens, self.max_new)
+                if len(target.output) >= total_budget:
+                    done.append(target)  # nothing (left) to generate
                     continue
-                first = int(np.argmax(logits[row, start + length - 1]))
-                req.output.append(first)
-                if req_budget <= 1 or first == self.eos_id:
-                    done.append(req)  # finished at prefill; slot stays free
+                seed = np.uint32(
+                    (target.seed if target.seed is not None
+                     else self._base_seed + target.rid) & 0xFFFFFFFF)
+                if self.temperature > 0:
+                    first = int(self._sample1(
+                        jnp.asarray(logits[row, start + length - 1]),
+                        jnp.asarray(seed), jnp.int32(length)))
+                else:
+                    first = int(np.argmax(logits[row, start + length - 1]))
+                target.output.append(first)
+                if len(target.output) >= total_budget or first == self.eos_id:
+                    done.append(target)  # finished at prefill; slot stays free
                     continue
                 slot = int(free[fi])
                 fi += 1
-                assigns.append((slot, req, row, start, length))
+                assigns.append((slot, target, row, start, length))
                 cur[slot] = first
-                emitted[slot] = 1
-                budget[slot] = req_budget
+                emitted[slot] = len(target.output)
+                budget[slot] = total_budget
+                self._seeds[slot] = seed
+                self._admit_seq[slot] = self._seq
+                self._seq += 1
             self.slots.assign_many(assigns, caches)
 
     def _prefill_admission(self, adm: Admission):

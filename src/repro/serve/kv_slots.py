@@ -36,9 +36,20 @@ Every cache leaf is typed by a *lane spec* from
   prefill rows so the end-of-row state *is* the end-of-request state) and
   the per-token ``advance`` is a no-op on the lane contents.
 
+``page_size`` switches the kv lanes to the **paged layout**
+(:mod:`repro.serve.pages`): each kv leaf becomes a pool of
+``page_size``-token physical pages (shape ``(L?, num_pages, page_size,
+...)``) and a per-slot block table maps logical page ``p // page_size`` to
+its physical page. Logical lane coordinates — canonical ring phase, the
+TDA ``[lo, hi)`` bounds — are untouched; ``assign``/``release`` also
+allocate/free pages, and the fused assign copy scatters through the block
+tables (unallocated entries carry the out-of-bounds ``FREE`` sentinel, so
+their updates are dropped). ``"state"`` lanes are never paged.
+
 Per-step slot occupancy (`utilization()`) is the serving analogue of the
 paper's PE-utilization metric: idle lanes are idle PEs under a shared weight
-sweep.
+sweep; in paged mode ``pool.memory_ratio()`` is the matching *footprint*
+metric (pages in use over pool capacity).
 """
 from __future__ import annotations
 
@@ -48,7 +59,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.tda.ops import paged_flat_positions
 from repro.models.transformer import Model
+from repro.serve.pages import PagePool
 
 __all__ = ["SlotKVCache", "SlotStateTable"]
 
@@ -68,15 +81,44 @@ class SlotKVCache:
     positions).
     """
 
-    def __init__(self, model: Model, num_slots: int, cache_len: int):
+    def __init__(self, model: Model, num_slots: int, cache_len: int,
+                 page_size: Optional[int] = None, pool_frac: float = 1.0):
         if num_slots <= 0 or cache_len <= 0:
             raise ValueError("num_slots and cache_len must be positive")
         self.num_slots = num_slots
         self.cache_len = cache_len
+        self.page_size = page_size
         cfg = model.cfg
         self._stacked = cfg.uniform_layers  # leaves carry a leading L dim
-        self.caches = model.init_cache(num_slots, cache_len)
         self.specs = model.cache_lane_specs()  # "kv" | "state" per leaf
+        ba = 1 if self._stacked else 0
+        # Shapes only — materializing the dense cache just to read widths
+        # would transiently hold dense + pool memory at once, defeating
+        # the footprint the paged layout exists to shrink.
+        template = jax.eval_shape(
+            lambda: model.init_cache(num_slots, cache_len))
+        # Per-leaf logical lane width (kv leaves only; 0 for state leaves).
+        self.widths = jax.tree.map(
+            lambda leaf, spec: leaf.shape[ba + 1] if spec == "kv" else 0,
+            template, self.specs)
+        self.pool: Optional[PagePool] = None
+        if page_size is not None:
+            kv_widths = [w for w in jax.tree.leaves(self.widths) if w > 0]
+            self.pool = PagePool(kv_widths, num_slots, page_size,
+                                 pool_frac=pool_frac)
+
+            def paged_leaf(leaf, spec, w):
+                if spec != "kv":
+                    return jnp.zeros(leaf.shape, leaf.dtype)
+                P = self.pool.classes[w].num_pages
+                shape = (leaf.shape[:ba] + (P, page_size)
+                         + leaf.shape[ba + 2:])
+                return jnp.zeros(shape, leaf.dtype)
+
+            self.caches = jax.tree.map(paged_leaf, template, self.specs,
+                                       self.widths)
+        else:
+            self.caches = model.init_cache(num_slots, cache_len)
         # host-side slot metadata
         self.active = np.zeros(num_slots, bool)
         self.lengths = np.zeros(num_slots, np.int32)
@@ -85,7 +127,9 @@ class SlotKVCache:
         # donating the slot cache lets accelerators update it in place (CPU
         # doesn't implement donation, so skip the warning there).
         donate = (0,) if jax.default_backend() != "cpu" else ()
-        self._copy = jax.jit(self._copy_lane, donate_argnums=donate)
+        fn = self._copy_lane_paged if self.pool is not None \
+            else self._copy_lane
+        self._copy = jax.jit(fn, donate_argnums=donate)
 
     # ------------------------------------------------------------------
 
@@ -94,6 +138,32 @@ class SlotKVCache:
 
     def utilization(self) -> float:
         return float(self.active.mean())
+
+    def _gather_lanes(self, src, rows, starts, lengths, width, out_width,
+                      dtype):
+        """Gather assignment segments into canonical ring phase: lane
+        position ``p`` holds token ``base + ((p - base) % width)`` with
+        ``base = max(len - width, 0)`` — for full lanes (``width`` >= len)
+        this degenerates to token ``p`` at position ``p``. Positions past
+        ``min(len, width)`` (and the ``out_width > width`` tail of a
+        page-quantized lane) are zeroed; decode masks them anyway. Shared
+        by the contiguous and paged fused copies so the phase math cannot
+        drift between layouts."""
+        ba = 1 if self._stacked else 0  # batch axis of every cache leaf
+        J = rows.shape[0]
+        wsrc = src.shape[ba + 1]
+        base = jnp.maximum(lengths - width, 0)[:, None]  # (J, 1)
+        pgrid = jnp.arange(out_width)[None, :]  # (1, out_width)
+        tok = base + jnp.mod(pgrid - base, width)  # (J, out_width) token ix
+        seq_pos = starts[:, None] + tok  # (J, out_width) source row position
+        valid = pgrid < jnp.minimum(lengths, width)[:, None]
+        sel = jnp.take(src, rows, axis=ba)  # (L?, J, wsrc, ...)
+        idx = jnp.clip(seq_pos, 0, wsrc - 1)
+        ishape = (1,) * ba + (J, out_width) + (1,) * (sel.ndim - ba - 2)
+        lanes = jnp.take_along_axis(sel, idx.reshape(ishape),
+                                    axis=ba + 1)  # (L?, J, out_width, ...)
+        vshape = (1,) * ba + (J, out_width) + (1,) * (lanes.ndim - ba - 2)
+        return jnp.where(valid.reshape(vshape), lanes, 0).astype(dtype)
 
     def _copy_lane(self, dst_caches, src_caches, slots, rows, starts,
                    lengths):
@@ -106,12 +176,10 @@ class SlotKVCache:
         * ``"kv"`` leaves: gather the segment's last ``min(len, ring)``
           tokens (``ring`` = the leaf's own width) from row positions
           ``[starts[j], starts[j] + lengths[j])`` into canonical ring phase
-          (token ``t`` at ``t % ring``); the remainder is zeroed (decode
-          masks positions outside ``[0, min(len, ring))`` anyway).
+          (:meth:`_gather_lanes`).
         * ``"state"`` leaves: gather the whole per-row state.
         """
         ba = 1 if self._stacked else 0  # batch axis of every cache leaf
-        J = slots.shape[0]
 
         def per_leaf(dst, src, spec):
             if spec == "state":
@@ -121,24 +189,8 @@ class SlotKVCache:
                 return dst.at[:, slots].set(sel.astype(dst.dtype))
             # "kv": per-token lane; ring width is the leaf's own seq dim.
             ring = dst.shape[ba + 1]
-            w = src.shape[ba + 1]
-            # Canonical ring phase: lane position p holds token
-            # base + ((p - base) % ring) with base = max(len - ring, 0) —
-            # for full lanes (ring == cache_len >= len) this degenerates to
-            # token p at position p.
-            base = jnp.maximum(lengths - ring, 0)[:, None]  # (J, 1)
-            pgrid = jnp.arange(ring)[None, :]  # (1, ring)
-            tok = base + jnp.mod(pgrid - base, ring)  # (J, ring) token index
-            seq_pos = starts[:, None] + tok  # (J, ring) source row position
-            valid = pgrid < jnp.minimum(lengths, ring)[:, None]
-            sel = jnp.take(src, rows, axis=ba)  # (L?, J, w, ...)
-            idx = jnp.clip(seq_pos, 0, w - 1)
-            ishape = (1,) * ba + (J, ring) + (1,) * (sel.ndim - ba - 2)
-            lanes = jnp.take_along_axis(sel, idx.reshape(ishape),
-                                        axis=ba + 1)  # (L?, J, ring, ...)
-            vshape = (1,) * ba + (J, ring) + (1,) * (lanes.ndim - ba - 2)
-            lanes = jnp.where(valid.reshape(vshape), lanes,
-                              0).astype(dst.dtype)
+            lanes = self._gather_lanes(src, rows, starts, lengths, ring,
+                                       ring, dst.dtype)
             # Padding entries carry slot == num_slots: out-of-bounds
             # scatter updates are dropped (JAX default), so they cost
             # nothing and real slots stay unique.
@@ -147,6 +199,42 @@ class SlotKVCache:
             return dst.at[:, slots].set(lanes)
 
         return jax.tree.map(per_leaf, dst_caches, src_caches, self.specs)
+
+    def _copy_lane_paged(self, dst_caches, src_caches, slots, rows, starts,
+                         lengths, tables):
+        """Paged variant of :meth:`_copy_lane`: the gather side
+        (:meth:`_gather_lanes` over the leaf's *logical* width) is shared;
+        the scatter side routes every lane position through the slot's
+        block table — position ``p`` lands in physical page ``bt[slot, p //
+        page_size]`` at offset ``p % page_size``. Sentinel table entries
+        (unallocated pages, and the padded ``slot == num_slots`` row)
+        produce out-of-bounds flat positions, which the scatter drops."""
+        ba = 1 if self._stacked else 0
+        ps = self.page_size
+
+        def per_leaf(dst, src, spec, w):
+            if spec == "state":
+                sel = jnp.take(src, rows, axis=ba)
+                if ba == 0:
+                    return dst.at[slots].set(sel.astype(dst.dtype))
+                return dst.at[:, slots].set(sel.astype(dst.dtype))
+            bt = tables[w]  # (num_slots + 1, lane_pages), sentinel row last
+            W = bt.shape[1] * ps  # page-quantized width (tail never read)
+            lanes = self._gather_lanes(src, rows, starts, lengths, w, W,
+                                       dst.dtype)
+            pages = jnp.take(bt, slots, axis=0)  # (J, lane_pages)
+            flatpos = paged_flat_positions(pages, ps)  # (J, W)
+            P = dst.shape[ba]
+            dstf = dst.reshape(dst.shape[:ba] + (P * ps,)
+                               + dst.shape[ba + 2:])
+            if ba == 0:
+                dstf = dstf.at[flatpos].set(lanes, mode="drop")
+            else:
+                dstf = dstf.at[:, flatpos].set(lanes, mode="drop")
+            return dstf.reshape(dst.shape)
+
+        return jax.tree.map(per_leaf, dst_caches, src_caches, self.specs,
+                            self.widths)
 
     def assign(self, slot: int, request, src_caches, row: int, start: int,
                length: int) -> None:
@@ -186,18 +274,40 @@ class SlotKVCache:
         slots = [a[0] for a in assignments]
         if len(set(slots)) != len(slots):
             raise ValueError(f"duplicate slots in one admission: {slots}")
+        if self.pool is not None:
+            # Page in each lane's logical prefix before the fused copy —
+            # one position past the prompt, so the page the engine's
+            # admission reserved for the first decode write is actually
+            # *held*, not just virtually counted (otherwise an older lane
+            # growing in the same step could still snatch it). An exhausted
+            # pool rolls the whole round back (the engine's page budget
+            # makes that unreachable in normal operation).
+            allocated = []
+            try:
+                for slot, _, _, _, length in assignments:
+                    self.pool.alloc_prefix(slot,
+                                           min(length + 1, self.cache_len))
+                    allocated.append(slot)
+            except RuntimeError:
+                for slot in allocated:
+                    self.pool.release(slot)
+                raise
         # Pad the round to a power of two: bounds jit variants of the fused
         # copy to log2(num_slots)+1 per source width (same idiom as the
         # engine's packed-prefill row padding). Padding entries scatter to
         # the out-of-bounds sentinel slot and are dropped.
         J = 1 << (len(assignments) - 1).bit_length()
         pad = J - len(assignments)
-        self.caches = self._copy(
-            self.caches, src_caches,
+        args = (
             jnp.asarray(slots + [self.num_slots] * pad, jnp.int32),
             jnp.asarray([a[2] for a in assignments] + [0] * pad, jnp.int32),
             jnp.asarray([a[3] for a in assignments] + [0] * pad, jnp.int32),
             jnp.asarray([a[4] for a in assignments] + [0] * pad, jnp.int32))
+        if self.pool is not None:
+            self.caches = self._copy(self.caches, src_caches, *args,
+                                     self.pool.device_tables())
+        else:
+            self.caches = self._copy(self.caches, src_caches, *args)
         for slot, request, _, _, length in assignments:
             self.active[slot] = True
             self.lengths[slot] = length
@@ -214,6 +324,8 @@ class SlotKVCache:
         # blocks-visited accounting) see an empty lane, not a stale one.
         self.lengths[slot] = 0
         self.request[slot] = None
+        if self.pool is not None:
+            self.pool.release(slot)
 
 
 # The class predates the recurrent/ring lane kinds; this alias is the

@@ -1,0 +1,230 @@
+"""Paged KV lane pool: block-table cache allocation for the slot table.
+
+The contiguous :class:`~repro.serve.kv_slots.SlotKVCache` allocates every
+kv lane dense — ``num_slots x lane_width`` tokens per leaf no matter how
+short the occupying request is — so cache memory (this reproduction's
+stand-in for the paper's external-memory footprint) does not scale with
+occupancy the way compute does through the TDA kernel's ``[lo, hi)``
+predication. ``PagePool`` is the data-arrangement counterpart of that
+predication: each kv leaf becomes a fixed pool of ``page_size``-token
+physical pages, and each slot holds an int32 *block table* mapping logical
+page ``i`` of its lane to a physical page (or the ``FREE`` sentinel).
+Lanes are allocated page-by-page as requests arrive and grow, and released
+pages return to a free list, so pages-in-use tracks live tokens, not
+capacity.
+
+Layout invariants (the bridge to the rest of the serving stack):
+
+* Logical lane coordinates are **unchanged**: token ``t`` of a slot still
+  lives at logical position ``t`` (full lanes) or ``t % width`` (ring
+  lanes, canonical ring phase) — paging only remaps *logical page*
+  ``p // page_size`` to a physical page. The TDA ``[lo, hi)`` bounds
+  contract and the canonical-ring-phase trick are untouched; with
+  ``page_size == decode_block_k`` one page is exactly one kv block and the
+  kernel reads the block table by scalar prefetch.
+* A slot's allocated pages are always a logical **prefix** of its lane
+  (pages ``0..k-1``): valid positions ``[0, hi)`` never touch an
+  unallocated page.
+* The ``FREE`` sentinel is ``num_pages``: a gather through it lands out of
+  bounds and a scatter through it is dropped (JAX semantics), so
+  unallocated table entries cost nothing and can never alias a live page.
+* Block tables carry one extra sentinel *row* (index ``num_slots``) that
+  stays all-``FREE`` forever: the fused assign copy pads admission rounds
+  with ``slot == num_slots`` entries, which must scatter nowhere.
+
+Lanes of the same logical width form a *width class* sharing one free list
+and one block table (``k``/``v``/scale leaves of one layer always allocate
+in lockstep; every model in ``configs/`` has at most one attention width,
+but mixed full + windowed stacks get one class each).
+
+Physical page *order* is irrelevant by construction — decode output is
+invariant to fragmentation (``tests/test_pages.py`` pins this as a
+property, and ``shuffle_free`` exists so tests can scramble the pool).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PagePool", "PageClass"]
+
+
+class PageClass:
+    """Bookkeeping for one lane width: free list + per-slot block table."""
+
+    def __init__(self, width: int, num_slots: int, page_size: int,
+                 num_pages: int):
+        self.width = width
+        self.lane_pages = -(-width // page_size)  # ceil
+        self.num_pages = num_pages
+        self.free: List[int] = list(range(num_pages))
+        # +1 sentinel row (stays all-FREE) for padded assign entries.
+        self.table = np.full((num_slots + 1, self.lane_pages), num_pages,
+                             np.int32)
+
+    @property
+    def FREE(self) -> int:
+        return self.num_pages
+
+
+class PagePool:
+    """Fixed pool of physical KV pages + per-slot block tables.
+
+    ``widths`` are the distinct logical kv-lane widths of the model's cache
+    leaves (``cache_len`` for full attention, ``min(window, cache_len)``
+    for ring lanes). ``pool_frac`` scales each class's physical page count
+    relative to the dense allocation ``num_slots * lane_pages`` — 1.0
+    reproduces dense *capacity* (never preempts) while still reporting the
+    occupancy-proportional footprint; < 1.0 genuinely shrinks the pool and
+    relies on the engine's preempt-and-requeue when it exhausts.
+    """
+
+    def __init__(self, widths: Sequence[int], num_slots: int, page_size: int,
+                 pool_frac: float = 1.0):
+        if page_size <= 0:
+            raise ValueError("page_size must be positive")
+        if not 0.0 < pool_frac <= 1.0:
+            raise ValueError("pool_frac must be in (0, 1]")
+        self.num_slots = num_slots
+        self.page_size = page_size
+        self.classes: Dict[int, PageClass] = {}
+        for w in sorted(set(int(w) for w in widths)):
+            lane_pages = -(-w // page_size)
+            num_pages = max(lane_pages,
+                            int(np.ceil(pool_frac * num_slots * lane_pages)))
+            self.classes[w] = PageClass(w, num_slots, page_size, num_pages)
+        self._dev: Optional[Dict[int, jnp.ndarray]] = None
+
+    # -- capacity queries ----------------------------------------------
+
+    @property
+    def total_pages(self) -> int:
+        return sum(c.num_pages for c in self.classes.values())
+
+    def pages_in_use(self) -> int:
+        return sum(c.num_pages - len(c.free) for c in self.classes.values())
+
+    def free_page_budget(self) -> int:
+        return sum(len(c.free) for c in self.classes.values())
+
+    def memory_ratio(self) -> float:
+        """Pages in use / pool page capacity — the footprint analogue of
+        the TDA blocks-visited ratio."""
+        return self.pages_in_use() / max(self.total_pages, 1)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        """Total pages (across classes) a lane holding ``n_tokens`` needs.
+        Ring lanes clamp at their width — a lane never needs more than
+        ``lane_pages`` pages no matter how long the request runs."""
+        return sum(self.class_needs(n_tokens).values())
+
+    def class_needs(self, n_tokens: int) -> Dict[int, int]:
+        """Per-width-class page demand of a lane holding ``n_tokens``."""
+        ps = self.page_size
+        return {w: -(-min(n_tokens, c.width) // ps)
+                for w, c in self.classes.items()}
+
+    def can_alloc(self, n_tokens: int) -> bool:
+        """Whether a fresh lane of ``n_tokens`` fits right now — checked
+        per class (a scalar free-page sum can lie when one class is dry)."""
+        return all(need <= len(self.classes[w].free)
+                   for w, need in self.class_needs(n_tokens).items())
+
+    def reserver(self, extra_tokens: int = 1):
+        """A stateful per-class reservation closure for admission control:
+        ``reserve(prompt_len)`` claims (virtually) the pages a lane
+        admitted at that length will use — ``extra_tokens`` ahead, so the
+        first decode write is covered too — and returns False, claiming
+        nothing, once any class would overcommit. The scheduler calls it
+        once per queue head (``Scheduler.next_admissions``)."""
+        free = {w: len(c.free) for w, c in self.classes.items()}
+
+        def reserve(prompt_len: int) -> bool:
+            needs = self.class_needs(prompt_len + extra_tokens)
+            if any(n > free[w] for w, n in needs.items()):
+                return False
+            for w, n in needs.items():
+                free[w] -= n
+            return True
+
+        return reserve
+
+    # -- allocation ----------------------------------------------------
+
+    def alloc_prefix(self, slot: int, n_tokens: int) -> None:
+        """Allocate the logical-prefix pages covering positions
+        ``[0, min(n_tokens, width))`` in every class. All-or-nothing:
+        raises ``RuntimeError`` (allocating nothing) if any class lacks
+        free pages — the scheduler's page budget makes that unreachable in
+        normal operation."""
+        plan: List[Tuple[PageClass, int]] = []
+        for c in self.classes.values():
+            need = -(-min(n_tokens, c.width) // self.page_size)
+            have = int(np.sum(c.table[slot] != c.FREE))
+            if need - have > len(c.free):
+                raise RuntimeError(
+                    f"page pool exhausted: class width={c.width} needs "
+                    f"{need - have} pages, {len(c.free)} free")
+            for lp in range(need):
+                if c.table[slot, lp] == c.FREE:
+                    plan.append((c, lp))
+        for c, lp in plan:
+            c.table[slot, lp] = c.free.pop()
+        if plan:
+            self._dev = None
+
+    def ensure_write(self, slot: int, length: int) -> bool:
+        """Make position ``length`` (mod each ring width) writable for
+        ``slot``: allocate the page it lands on in every class that does
+        not have it yet. Returns False — allocating nothing — when any
+        class is out of free pages (the engine then preempts)."""
+        plan: List[Tuple[PageClass, int]] = []
+        for c in self.classes.values():
+            lp = (length % c.width) // self.page_size
+            if c.table[slot, lp] == c.FREE:
+                if not c.free:
+                    return False
+                plan.append((c, lp))
+        for c, lp in plan:
+            c.table[slot, lp] = c.free.pop()
+        if plan:
+            self._dev = None
+        return True
+
+    def release(self, slot: int) -> None:
+        for c in self.classes.values():
+            held = c.table[slot]
+            for lp in np.flatnonzero(held != c.FREE):
+                c.free.append(int(held[lp]))
+            held[:] = c.FREE
+        self._dev = None
+
+    def shuffle_free(self, rng: np.random.Generator) -> None:
+        """Scramble physical page order (tests: fragmentation-independence
+        is a property, not a hope)."""
+        for c in self.classes.values():
+            rng.shuffle(c.free)
+
+    # -- device views --------------------------------------------------
+
+    def device_tables(self) -> Dict[int, jnp.ndarray]:
+        """``{width: (num_slots + 1, lane_pages) int32}`` block tables
+        (sentinel row included), cached until the next mutation."""
+        if self._dev is None:
+            self._dev = {w: jnp.asarray(c.table)
+                         for w, c in self.classes.items()}
+        return self._dev
+
+    # -- invariants (tests) --------------------------------------------
+
+    def check_invariants(self) -> None:
+        """No page is double-mapped, and free + mapped == capacity."""
+        for c in self.classes.values():
+            mapped = c.table[c.table != c.FREE]
+            assert c.table[self.num_slots].tolist() == [c.FREE] * c.lane_pages
+            assert len(set(mapped.tolist())) == mapped.size, "page aliased"
+            assert len(set(c.free)) == len(c.free), "free list duplicated"
+            assert mapped.size + len(c.free) == c.num_pages, "pages leaked"
+            assert not (set(c.free) & set(mapped.tolist()))

@@ -1,0 +1,58 @@
+"""In-graph sampled decoding: temperature + top-k inside the jitted step.
+
+Greedy decoding stays the engine default (``temperature == 0`` never even
+builds the sampling ops, so it is bit-identical to the plain argmax path).
+With ``temperature > 0`` the next token is drawn from the
+temperature-scaled, optionally top-k-truncated distribution using a
+**per-(request, position) PRNG key**:
+
+    key(seed_of_request)  --fold_in-->  position  --categorical-->  token
+
+Deriving the step key by folding the request's seed with the *absolute
+position* (the slot's cache depth) makes sampling a pure function of
+(request, position, logits): it does not depend on which slot the request
+occupies, on what else is in flight, or on page-pool fragmentation — and a
+request that is preempted and later resumed re-draws exactly the token it
+would have drawn uninterrupted. ``tests/test_pages.py`` pins this.
+
+The same functions run in two places: vmapped over all slots inside the
+jitted decode step, and on a single row host-side when the engine samples
+a request's *first* token from its prefill logits — identical math, so the
+first token is as reproducible as the rest.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sample_tokens"]
+
+NEG_INF = -1e30
+
+
+def sample_tokens(logits: jnp.ndarray,  # (B, V) float
+                  seeds: jnp.ndarray,  # (B,) uint32 per-request seeds
+                  positions: jnp.ndarray,  # (B,) int32 absolute positions
+                  temperature: float,
+                  top_k: Optional[int] = None) -> jnp.ndarray:
+    """Draw one token per row. ``temperature`` must be > 0 (callers keep
+    the greedy path separate so temperature == 0 stays bit-identical to
+    argmax); ``top_k`` truncates each row to its k highest logits before
+    sampling. Returns (B,) int32."""
+    if temperature <= 0.0:
+        raise ValueError("temperature must be > 0 for sampling; "
+                         "the greedy path is plain argmax")
+    x = logits.astype(jnp.float32) / temperature
+    if top_k is not None and top_k < x.shape[-1]:
+        kth = jax.lax.top_k(x, top_k)[0][..., -1:]
+        x = jnp.where(x < kth, NEG_INF, x)
+
+    def draw(seed, pos, row):
+        key = jax.random.fold_in(jax.random.key(seed), pos)
+        return jax.random.categorical(key, row)
+
+    return jax.vmap(draw)(seeds.astype(jnp.uint32),
+                          positions.astype(jnp.int32),
+                          x).astype(jnp.int32)

@@ -44,6 +44,10 @@ class Request:
     rid: int
     prompt: np.ndarray  # int32 token ids
     max_new_tokens: int = 16
+    # PRNG seed for sampled decoding (engine temperature > 0); None derives
+    # a per-request seed from the engine's base seed and the rid, so two
+    # requests never share a stream by accident.
+    seed: Optional[int] = None
     # filled by the engine:
     output: Optional[List[int]] = None
 
@@ -124,20 +128,43 @@ class Scheduler:
     def pending(self) -> int:
         return len(self.queue)
 
-    def next_admissions(self, free_slots: int) -> List[Admission]:
-        """Admit up to ``free_slots`` queued requests as admission groups."""
+    def requeue(self, req: Request) -> None:
+        """Put a preempted request back at the queue *head* (it was
+        admitted before anything still queued, and FIFO resume order keeps
+        paged admission deterministic). Skips :meth:`submit`'s prompt-length
+        check: a resumed prompt carries its generated tokens, and the
+        original admission already proved the total fits a cache lane."""
+        self.queue.insert(0, req)
+
+    def next_admissions(self, free_slots: int,
+                        reserve=None) -> List[Admission]:
+        """Admit up to ``free_slots`` queued requests as admission groups.
+
+        With a paged lane pool the engine also passes ``reserve`` — a
+        stateful callable (``PagePool.reserver``) that claims the pages a
+        lane admitted at ``prompt_len`` will use, per width class, and
+        returns False once the pool would overcommit: admission then stops
+        at the queue head that no longer fits — FIFO head-blocking, not
+        skip-ahead, so the admission sequence (and therefore every token)
+        is deterministic for a given workload.
+        """
+        def fits(req: Request) -> bool:
+            return reserve is None or reserve(len(req.prompt))
+
         if not self.pack:
             take = min(free_slots, self.max_rows, len(self.queue))
-            if take <= 0:
+            reqs: List[Request] = []
+            while len(reqs) < take and self.queue and fits(self.queue[0]):
+                reqs.append(self.queue.pop(0))
+            if not reqs:
                 return []
-            reqs = [self.queue.pop(0) for _ in range(take)]
             ml = self.policy.max_len
             width = max(-(-len(r.prompt) // ml) * ml for r in reqs)
             return [Admission(requests=reqs, row_width=width)]
         groups: List[Admission] = []
         shorts: List[Request] = []
         taken = 0
-        while self.queue and taken < free_slots:
+        while self.queue and taken < free_slots and fits(self.queue[0]):
             req = self.queue[0]
             if len(req.prompt) > self.policy.max_len:
                 self.queue.pop(0)

@@ -1,0 +1,307 @@
+"""Paged KV lane pool: allocator properties, fragmentation independence,
+paged-vs-contiguous token equality, preempt-and-requeue, and in-graph
+sampled decoding.
+
+The load-bearing claims, each pinned here as a property rather than hoped:
+
+* ``PagePool`` never double-maps a page and conserves capacity under any
+  admit/release schedule (``check_invariants`` after every step).
+* Decode output is **invariant to physical page order** — same requests,
+  shuffled pool, identical tokens (paging only remaps storage, logical
+  lane coordinates are untouched).
+* The paged engine is **token-identical to the contiguous layout** on the
+  three cache kinds: qwen1.5 (full-attention lanes), starcoder2 (ring
+  lanes, prompts past the window), mamba2 (recurrent state lanes, never
+  paged).
+* Preempt-and-requeue under a tight pool is invisible in the output
+  stream, greedy and sampled alike (sampling keys on absolute position).
+"""
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models.transformer import Model
+from repro.serve import Engine, PagePool, Request
+
+
+# ---------------------------------------------------------------------------
+# PagePool allocator properties
+# ---------------------------------------------------------------------------
+
+
+def test_page_pool_basic_alloc_release():
+    pool = PagePool([40], num_slots=4, page_size=16)
+    assert pool.total_pages == 12 and pool.free_page_budget() == 12
+    assert pool.pages_needed(1) == 1
+    assert pool.pages_needed(17) == 2
+    assert pool.pages_needed(10_000) == 3  # clamps at the lane width
+    pool.alloc_prefix(0, 20)  # positions [0, 20) -> pages 0, 1
+    assert pool.pages_in_use() == 2
+    c = pool.classes[40]
+    assert (c.table[0, :2] != c.FREE).all() and c.table[0, 2] == c.FREE
+    assert pool.ensure_write(0, 20)  # page 1 already resident: no-op
+    assert pool.pages_in_use() == 2
+    assert pool.ensure_write(0, 33)  # page 2
+    assert pool.pages_in_use() == 3
+    pool.release(0)
+    assert pool.pages_in_use() == 0 and pool.free_page_budget() == 12
+    pool.check_invariants()
+
+
+def test_page_pool_ring_class_wraps():
+    """Ring lanes (width < cache_len) never need more than their own pages
+    and ensure_write wraps with the ring."""
+    pool = PagePool([32], num_slots=2, page_size=16)
+    pool.alloc_prefix(0, 32)
+    assert pool.pages_in_use() == 2
+    # position 40 wraps to 40 % 32 = 8 -> page 0, already resident
+    assert pool.ensure_write(0, 40)
+    assert pool.pages_in_use() == 2
+    pool.check_invariants()
+
+
+def test_page_pool_exhaustion_and_rollback():
+    pool = PagePool([64], num_slots=2, page_size=16, pool_frac=0.5)
+    assert pool.total_pages == 4
+    pool.alloc_prefix(0, 60)  # 4 pages: pool full
+    assert not pool.ensure_write(1, 0)  # dry: refuses, allocates nothing
+    assert pool.pages_in_use() == 4
+    with pytest.raises(RuntimeError):
+        pool.alloc_prefix(1, 20)
+    pool.check_invariants()
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_page_pool_invariants_under_random_schedule(seed):
+    """No double-allocation and alloc/free conservation under random
+    admit / grow / release schedules (the ISSUE's property test)."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool([48, 32], num_slots=6, page_size=16,
+                    pool_frac=float(rng.uniform(0.4, 1.0)))
+    held = {}
+    for _ in range(60):
+        op = rng.integers(0, 3)
+        if op == 0:  # admit a free slot
+            free = [s for s in range(6) if s not in held]
+            if free:
+                s = int(rng.choice(free))
+                n = int(rng.integers(1, 48))
+                if pool.can_alloc(n):  # per class, like the engine reserves
+                    pool.alloc_prefix(s, n)
+                    held[s] = n
+        elif op == 1 and held:  # grow an occupied slot by one position
+            s = int(rng.choice(list(held)))
+            pool.ensure_write(s, held[s])
+            held[s] += 1
+        elif op == 2 and held:  # release
+            s = int(rng.choice(list(held)))
+            pool.release(s)
+            del held[s]
+        pool.check_invariants()
+    for s in list(held):
+        pool.release(s)
+    pool.check_invariants()
+    assert pool.pages_in_use() == 0
+    assert pool.free_page_budget() == pool.total_pages
+
+
+# ---------------------------------------------------------------------------
+# paged engine == contiguous engine, per cache kind
+# ---------------------------------------------------------------------------
+
+
+def _run_engine(model, params, prompts, budgets, **kw):
+    eng = Engine(model, params, max_len=16, max_new_tokens=8, num_slots=2,
+                 **kw)
+    for rid, (p, b) in enumerate(zip(prompts, budgets)):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=b))
+    done = eng.run()
+    assert sorted(r.rid for r in done) == list(range(len(prompts)))
+    return {r.rid: r.output for r in done}, eng
+
+
+def _arch_workload(arch, lengths, seed=1):
+    cfg = get_config(arch, "smoke", dtype="float32")
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in lengths]
+    return m, params, prompts
+
+
+@pytest.mark.parametrize("arch,lengths,kw", [
+    # full-attention KV lanes
+    ("qwen1.5-4b", [3, 11, 25, 7, 16], {}),
+    # ring lanes (window 32 < cache_len), incl. a prompt past the window
+    ("starcoder2-15b", [3, 11, 25, 7, 40], {"max_prompt_len": 48}),
+    # recurrent state lanes: never paged (the engine must degrade cleanly)
+    ("mamba2-370m", [3, 7, 5, 8], {}),
+])
+def test_paged_matches_contiguous(arch, lengths, kw):
+    m, params, prompts = _arch_workload(arch, lengths)
+    budgets = [4, 2, 5, 3, 6][:len(lengths)]
+    cont, _ = _run_engine(m, params, prompts, budgets, paged=False, **kw)
+    paged, eng = _run_engine(m, params, prompts, budgets, paged=True,
+                             page_size=16, **kw)
+    assert paged == cont, f"{arch}: paged layout changed tokens"
+    st = eng.decode_stats
+    if eng.paged:
+        assert st["kv_pages_total"] > 0
+        assert 0 < st["kv_memory_ratio"] <= 1
+    else:  # pure-recurrent stack: paging is a no-op, not an error
+        assert arch == "mamba2-370m" and st["kv_memory_ratio"] == 1.0
+
+
+def test_paged_output_invariant_to_fragmentation():
+    """Same requests, shuffled physical pages, identical tokens — the
+    ISSUE's fragmentation-independence property. The pool is pre-scrambled
+    AND pre-fragmented (a warmup allocation pattern is torn down) before
+    the real workload runs."""
+    m, params, prompts = _arch_workload("qwen1.5-4b", [3, 11, 25, 7, 16])
+    budgets = [4, 2, 5, 3, 6]
+    base, _ = _run_engine(m, params, prompts, budgets, paged=True,
+                          page_size=16)
+    for seed in (3, 4):
+        eng = Engine(m, params, max_len=16, max_new_tokens=8, num_slots=2,
+                     paged=True, page_size=16)
+        rng = np.random.default_rng(seed)
+        pool = eng.slots.pool
+        # fragment: random partial allocations, released in random order
+        for s in range(eng.num_slots):
+            pool.alloc_prefix(s, int(rng.integers(1, 40)))
+        for s in rng.permutation(eng.num_slots):
+            pool.release(int(s))
+        pool.shuffle_free(rng)
+        pool.check_invariants()
+        for rid, (p, b) in enumerate(zip(prompts, budgets)):
+            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=b))
+        out = {r.rid: r.output for r in eng.run()}
+        assert out == base, "physical page order leaked into tokens"
+
+
+# ---------------------------------------------------------------------------
+# preempt-and-requeue
+# ---------------------------------------------------------------------------
+
+
+def _tight_workload():
+    m, params, prompts = _arch_workload(
+        "qwen2.5-32b", [5, 9, 13, 7, 11, 6], seed=2)
+    budgets = [14, 12, 16, 10, 15, 12]
+    return m, params, prompts, budgets
+
+
+def _run_tight(m, params, prompts, budgets, **kw):
+    eng = Engine(m, params, max_len=16, max_new_tokens=16, num_slots=4, **kw)
+    for rid, (p, b) in enumerate(zip(prompts, budgets)):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=b))
+    done = eng.run()
+    assert sorted(r.rid for r in done) == list(range(len(prompts)))
+    return {r.rid: r.output for r in done}, eng.decode_stats
+
+
+def test_preemption_is_invisible_in_output():
+    """A pool too small for the in-flight lanes forces mid-decode
+    preemption; the requeued continuations must finish with exactly the
+    tokens of an unconstrained run, and the caller gets back the same
+    Request objects it submitted."""
+    m, params, prompts, budgets = _tight_workload()
+    ref, ref_st = _run_tight(m, params, prompts, budgets, paged=False)
+    assert ref_st["preemptions"] == 0
+    out, st = _run_tight(m, params, prompts, budgets, paged=True,
+                         page_size=16, pool_frac=0.34)
+    assert st["preemptions"] > 0, "pool was tight enough to preempt"
+    assert out == ref, "preemption changed the output stream"
+    assert 0 < st["kv_memory_ratio"] <= 1
+
+
+def test_pool_floor_fits_one_max_size_request():
+    """However small pool_frac is, every class keeps at least one full
+    lane's pages (PagePool floors at lane_pages), so a lone max-size
+    request can always run to completion instead of livelocking — it may
+    just serialize the workload through preemption."""
+    m, params, prompts = _arch_workload("qwen2.5-32b", [20, 25, 30])
+    budgets = [6, 6, 6]
+    ref, _ = _run_engine(m, params, prompts, budgets, paged=False,
+                         max_prompt_len=32)
+    eng = Engine(m, params, max_len=16, max_new_tokens=8, num_slots=2,
+                 max_prompt_len=32, paged=True, page_size=16,
+                 pool_frac=0.01)  # floored to one lane's pages
+    pool = eng.slots.pool
+    (cls,) = pool.classes.values()
+    assert pool.total_pages == cls.lane_pages  # the floor
+    for rid, (p, b) in enumerate(zip(prompts, budgets)):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=b))
+    out = {r.rid: r.output for r in eng.run()}
+    assert out == ref
+
+
+# ---------------------------------------------------------------------------
+# in-graph sampled decoding
+# ---------------------------------------------------------------------------
+
+
+def test_sampling_unit_respects_top_k():
+    import jax.numpy as jnp
+    from repro.serve import sample_tokens
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(64, 50)), jnp.float32)
+    top = np.asarray(jax.lax.top_k(logits, 5)[1])
+    draws = sample_tokens(logits, jnp.arange(64, dtype=jnp.uint32),
+                          jnp.zeros(64, jnp.int32), 1.3, top_k=5)
+    for b, t in enumerate(np.asarray(draws)):
+        assert t in top[b], "sampled token escaped the top-k set"
+    # same (seed, position) -> same token; shifted position -> new draw
+    again = sample_tokens(logits, jnp.arange(64, dtype=jnp.uint32),
+                          jnp.zeros(64, jnp.int32), 1.3, top_k=5)
+    np.testing.assert_array_equal(np.asarray(draws), np.asarray(again))
+    moved = sample_tokens(logits, jnp.arange(64, dtype=jnp.uint32),
+                          jnp.ones(64, jnp.int32), 1.3, top_k=5)
+    assert not np.array_equal(np.asarray(draws), np.asarray(moved))
+
+
+def test_engine_temperature_zero_is_bitwise_greedy():
+    m, params, prompts = _arch_workload("qwen2.5-32b", [3, 11, 7, 5])
+    budgets = [4, 3, 5, 4]
+    greedy, _ = _run_engine(m, params, prompts, budgets)
+    t0, _ = _run_engine(m, params, prompts, budgets, temperature=0.0)
+    assert t0 == greedy
+
+
+def test_engine_sampling_deterministic_and_seeded():
+    m, params, prompts = _arch_workload("qwen2.5-32b", [3, 11, 7, 5])
+    budgets = [4, 3, 5, 4]
+    kw = dict(temperature=0.8, top_k=12)
+    a, _ = _run_engine(m, params, prompts, budgets, seed=7, **kw)
+    b, _ = _run_engine(m, params, prompts, budgets, seed=7, **kw)
+    c, _ = _run_engine(m, params, prompts, budgets, seed=8, **kw)
+    assert a == b, "same seeds must reproduce the same tokens"
+    assert a != c, "different base seed should perturb at least one stream"
+    # per-request seeds override the engine-derived ones
+    eng_kw = dict(max_len=16, max_new_tokens=8, num_slots=2, **kw)
+    eng = Engine(m, params, seed=7, **eng_kw)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=4, seed=99))
+    d = {r.rid: r.output for r in eng.run()}
+    eng = Engine(m, params, seed=8, **eng_kw)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=4, seed=99))
+    e = {r.rid: r.output for r in eng.run()}
+    assert d == e, "explicit Request.seed must pin the stream"
+
+
+def test_sampled_decode_invariant_under_preemption():
+    """Sampling keys on (request seed, absolute position), so a preempted
+    and resumed request draws exactly the tokens of an uninterrupted run."""
+    m, params, prompts, budgets = _tight_workload()
+    kw = dict(temperature=0.8, top_k=12, seed=7)
+    free, _ = _run_tight(m, params, prompts, budgets, paged=True,
+                         page_size=16, **kw)
+    tight, st = _run_tight(m, params, prompts, budgets, paged=True,
+                           page_size=16, pool_frac=0.34, **kw)
+    assert st["preemptions"] > 0
+    assert tight == free, "preemption perturbed the sampled stream"

@@ -26,6 +26,22 @@ import sys
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
 
+# Load-bearing doc anchors: each (file, substring) must stay present so the
+# documented contracts (paged lane pool, sampling, sidecar gates) cannot be
+# silently dropped in a refactor. Extend when a new contract lands.
+REQUIRED_ANCHORS = [
+    ("README.md", "python -m pytest -x -q"),
+    ("README.md", "serve/pages.py"),          # paged lane-pool column/row
+    ("README.md", "kv_memory_ratio"),
+    ("serving.md", "src/repro/serve/pages.py"),
+    ("serving.md", "block table"),
+    ("serving.md", "[lo, hi)"),
+    ("serving.md", "kv_memory_ratio"),
+    ("serving.md", "preempt"),
+    ("serving.md", "src/repro/serve/sampling.py"),
+    ("serving.md", "speedup_vs_lockstep"),
+]
+
 PATH_RE = re.compile(
     r"[`(]((?:src|tests|examples|benchmarks|docs|experiments|tools)/"
     r"[A-Za-z0-9_./\-]*)")
@@ -60,6 +76,15 @@ def check_commands(md: pathlib.Path, text: str, errors: list) -> None:
                 errors.append(f"{md.name}: `python {script}` missing")
 
 
+def check_anchors(errors: list) -> None:
+    texts = {md.name: md.read_text() for md in DOC_FILES if md.exists()}
+    for fname, needle in REQUIRED_ANCHORS:
+        if fname not in texts:
+            errors.append(f"{fname} missing (required by anchors)")
+        elif needle not in texts[fname]:
+            errors.append(f"{fname}: required anchor not found: {needle!r}")
+
+
 def main() -> int:
     errors: list = []
     readme = (ROOT / "README.md")
@@ -69,9 +94,7 @@ def main() -> int:
         text = md.read_text()
         check_paths(md, text, errors)
         check_commands(md, text, errors)
-    if readme.exists() and "python -m pytest -x -q" not in readme.read_text():
-        errors.append("README.md: tier-1 verify command "
-                      "(`python -m pytest -x -q`) not documented")
+    check_anchors(errors)
     if errors:
         print("\n".join(errors))
         return 1
