@@ -416,6 +416,9 @@ def attention_block(
     pages: Optional[Dict] = None,  # paged decode (engine-only): {"bt":
     # (B, n) int32 block table, "width": logical lane width (static int),
     # "page_size": static int}; cache leaves are then physical page pools
+    prefix_kv: Optional[Dict] = None,  # suffix prefill (engine-only):
+    # {"k"/"v": (B, Np, Hkv, D) fp post-RoPE cached prefix, "len": int32
+    # valid prefix length}; queries attend prefix ∥ causal-suffix
     layer_idx: Optional[jnp.ndarray] = None,  # set when cache is L-stacked
     kv: Optional[jnp.ndarray] = None,  # cross-attention memory (B, Skv, d)
     seg_kv: Optional[jnp.ndarray] = None,
@@ -626,16 +629,47 @@ def attention_block(
             else:
                 new_cache = {"k": write(cache["k"], kw, (0, 0, 0, 0)),
                              "v": write(cache["v"], vw, (0, 0, 0, 0))}
-        o = flash_attention(
-            q, k, v,
-            causal=cfg.causal and kv is None,
-            window=window,
-            chunk=cfg.attn_chunk,
-            seg_q=seg_ids,
-            seg_kv=seg_kv if kv is not None else seg_ids,
-            block_dtype=jnp.dtype(cfg.flash_block_dtype),
-            wedge=cfg.causal_wedge,
-        ).reshape(B, S, cfg.n_heads * hd)
+        if prefix_kv is not None:
+            # ---- suffix prefill over a shared KV prefix (serve/pages.py):
+            # the cache already holds the prefix's post-RoPE K/V (gathered
+            # out of shared pages); only the suffix rides this forward, so
+            # prepend the prefix to the keys and let flash_attention's
+            # decode-style alignment (queries sit at the END of the kv
+            # axis) keep suffix causality while every query sees the whole
+            # prefix. Positions/RoPE for the suffix are absolute (the
+            # engine passes them); the prefix needs none — it was rotated
+            # at write time. The window mask is dropped on purpose: ring
+            # classes only share prefixes when the *total* sequence fits
+            # the window (an unwrapped lane), so it could never bind.
+            pk = prefix_kv["k"].astype(dt)  # (B, Np, Hkv, D)
+            pv = prefix_kv["v"].astype(dt)
+            plen = prefix_kv["len"]
+            sq = seg_ids if seg_ids is not None \
+                else jnp.ones((B, S), jnp.int32)
+            pseg = (jax.lax.iota(jnp.int32, pk.shape[1])[None, :]
+                    < jnp.reshape(plen, (-1, 1))).astype(sq.dtype)
+            pseg = jnp.broadcast_to(pseg, (B, pk.shape[1]))
+            o = flash_attention(
+                q, jnp.concatenate([pk, k], axis=1),
+                jnp.concatenate([pv, v], axis=1),
+                causal=cfg.causal and kv is None,
+                window=None,
+                chunk=cfg.attn_chunk,
+                seg_q=sq,
+                seg_kv=jnp.concatenate([pseg, sq], axis=1),
+                block_dtype=jnp.dtype(cfg.flash_block_dtype),
+            ).reshape(B, S, cfg.n_heads * hd)
+        else:
+            o = flash_attention(
+                q, k, v,
+                causal=cfg.causal and kv is None,
+                window=window,
+                chunk=cfg.attn_chunk,
+                seg_q=seg_ids,
+                seg_kv=seg_kv if kv is not None else seg_ids,
+                block_dtype=jnp.dtype(cfg.flash_block_dtype),
+                wedge=cfg.causal_wedge,
+            ).reshape(B, S, cfg.n_heads * hd)
 
     y = apply_linear(p["wo"], o, dicts, f"{prefix}_o", fcfg, sparse_train)
     return y.astype(dt), new_cache

@@ -125,7 +125,7 @@ class Model:
 
     def _block(self, lp: Dict, x: jnp.ndarray, kind: str, *, dicts, positions,
                seg_ids, cache_l, cache_index, mesh, sparse_train,
-               layer_idx=None, slot_mask=None, pages_l=None):
+               layer_idx=None, slot_mask=None, pages_l=None, prefix_l=None):
         cfg = self.cfg
         aux = jnp.float32(0.0)
         new_cache = None
@@ -136,7 +136,7 @@ class Model:
                 lp["attn"], h, cfg=cfg, dicts=dicts, positions=positions,
                 seg_ids=seg_ids, window=window, cache=cache_l,
                 cache_index=cache_index, slot_mask=slot_mask,
-                layer_idx=layer_idx, pages=pages_l,
+                layer_idx=layer_idx, pages=pages_l, prefix_kv=prefix_l,
                 sparse_train=sparse_train, mesh=mesh)
             x = x + a_out
             h2 = L.apply_norm(lp["norm2"], x)
@@ -183,17 +183,21 @@ class Model:
 
     def _stack_forward(self, params, x, *, dicts, positions, seg_ids, caches,
                        cache_index, mesh, sparse_train, unroll=False,
-                       slot_mask=None, pages=None):
+                       slot_mask=None, pages=None, prefix=None):
         """Run the block stack; returns (x, new_caches, aux). ``pages`` is
         the paged-decode block-table info: one entry shared by every layer
         of a uniform stack, or ``{layer_name: entry-or-None}`` for
-        heterogeneous stacks (recurrent layers carry ``None``)."""
+        heterogeneous stacks (recurrent layers carry ``None``). ``prefix``
+        is the suffix-prefill shared-prefix KV (``{"k", "v", "len"}``
+        with per-layer leaves: L-stacked arrays for uniform stacks,
+        ``{layer_name: array-or-None}`` otherwise)."""
         cfg = self.cfg
         if cfg.uniform_layers and unroll:
             # Unrolled layer loop (decode): tiny graphs; static layer indices
             # keep every cache update a local in-place DUS — the scanned
             # carry otherwise copies the whole stacked cache every layer
             # (§Perf cell C).
+            assert prefix is None, "prefix_kv is a prefill-only input"
             kind = cfg.block_kind(0)
             aux = jnp.float32(0.0)
             cur_caches = caches
@@ -210,12 +214,19 @@ class Model:
         if cfg.uniform_layers:
             kind = cfg.block_kind(0)
             idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+            plen = prefix["len"] if prefix is not None else None
 
             # Caches ride the scan CARRY (in-place dynamic-update-slice per
             # layer), never the ys — ys-stacking would copy the whole KV
-            # cache every layer (EXPERIMENTS §Dry-run).
+            # cache every layer (EXPERIMENTS §Dry-run). Per-layer prefix KV
+            # rides the xs (it is read-only per layer, like the params).
             def body(carry, xs):
-                lp, li = xs
+                if prefix is None:
+                    lp, li = xs
+                    prefix_l = None
+                else:
+                    lp, li, pk_l, pv_l = xs
+                    prefix_l = {"k": pk_l, "v": pv_l, "len": plen}
                 if caches is None:
                     xc, aux = carry
                     cache_arg = None
@@ -226,20 +237,23 @@ class Model:
                     seg_ids=seg_ids, cache_l=cache_arg,
                     cache_index=cache_index, mesh=mesh,
                     sparse_train=sparse_train, layer_idx=li,
-                    slot_mask=slot_mask, pages_l=pages)
+                    slot_mask=slot_mask, pages_l=pages, prefix_l=prefix_l)
                 if caches is None:
                     return (xc, aux + aux_l), None
                 return (xc, aux + aux_l, new_cache), None
 
+            xs = (params["layers"], idxs)
+            if prefix is not None:
+                xs = xs + (prefix["k"], prefix["v"])
             if cfg.remat != "none":
                 policy = getattr(jax.checkpoint_policies, cfg.remat)
                 body = jax.checkpoint(body, policy=policy)
             if caches is None:
                 (x, aux), _ = jax.lax.scan(
-                    body, (x, jnp.float32(0.0)), (params["layers"], idxs))
+                    body, (x, jnp.float32(0.0)), xs)
                 return x, None, aux
             (x, aux, new_caches), _ = jax.lax.scan(
-                body, (x, jnp.float32(0.0), caches), (params["layers"], idxs))
+                body, (x, jnp.float32(0.0), caches), xs)
             return x, new_caches, aux
 
         aux = jnp.float32(0.0)
@@ -248,11 +262,15 @@ class Model:
             name = f"layer_{i:02d}"
             cache_l = caches[name] if caches is not None else None
             pages_l = pages.get(name) if pages is not None else None
+            prefix_l = None
+            if prefix is not None and prefix["k"].get(name) is not None:
+                prefix_l = {"k": prefix["k"][name], "v": prefix["v"][name],
+                            "len": prefix["len"]}
             blk = functools.partial(
                 self._block, kind=cfg.block_kind(i), dicts=dicts,
                 positions=positions, seg_ids=seg_ids, cache_l=cache_l,
                 cache_index=cache_index, mesh=mesh, sparse_train=sparse_train,
-                slot_mask=slot_mask, pages_l=pages_l)
+                slot_mask=slot_mask, pages_l=pages_l, prefix_l=prefix_l)
             if cfg.remat != "none":
                 policy = getattr(jax.checkpoint_policies, cfg.remat)
                 blk = jax.checkpoint(blk, policy=policy, static_argnums=())
@@ -263,9 +281,15 @@ class Model:
         return x, new_caches, aux
 
     def hidden(self, params: Dict, batch: Dict, *, mesh=None,
-               sparse_train: bool = False, caches=None, cache_index=None
-               ) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
-        """Final-norm hidden states. Returns (h, new_caches, aux_loss)."""
+               sparse_train: bool = False, caches=None, cache_index=None,
+               prefix_kv=None) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
+        """Final-norm hidden states. Returns (h, new_caches, aux_loss).
+
+        ``prefix_kv`` (suffix prefill, serving only): cached post-RoPE K/V
+        of a shared prompt prefix — ``{"k", "v", "len"}`` with per-layer
+        attention memories — that every attention layer prepends to its
+        keys. ``batch`` then carries only the suffix tokens, with absolute
+        ``positions`` starting at the prefix length."""
         cfg = self.cfg
         ref = batch["embeds"] if cfg.external_embeddings else batch["inputs"]
         B, Ss = ref.shape[0], ref.shape[1]
@@ -279,21 +303,23 @@ class Model:
         x, new_caches, aux = self._stack_forward(
             params, x, dicts=dicts, positions=positions, seg_ids=seg_ids,
             caches=caches, cache_index=cache_index, mesh=mesh,
-            sparse_train=sparse_train)
+            sparse_train=sparse_train, prefix=prefix_kv)
         x = L.apply_norm(params["final_norm"], x)
         return x, new_caches, aux
 
     def apply(self, params: Dict, batch: Dict, *, mesh=None,
-              sparse_train: bool = False, caches=None, cache_index=None
-              ) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
+              sparse_train: bool = False, caches=None, cache_index=None,
+              prefix_kv=None) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
         """Full-sequence forward. Returns (logits, new_caches, aux_loss).
 
         Materializes all-position logits — fine for small vocab / short
-        sequences; the train loss uses chunked_xent instead."""
+        sequences; the train loss uses chunked_xent instead. ``prefix_kv``
+        selects the suffix-prefill path (see :meth:`hidden`)."""
         x, new_caches, aux = self.hidden(params, batch, mesh=mesh,
                                          sparse_train=sparse_train,
                                          caches=caches,
-                                         cache_index=cache_index)
+                                         cache_index=cache_index,
+                                         prefix_kv=prefix_kv)
         logits = L.lm_logits(params["lm_head"], params["embed"], x, self.cfg)
         return logits, new_caches, aux
 

@@ -46,12 +46,26 @@ token-identical to an uninterrupted run (greedy trivially; sampled decode
 because step keys derive from absolute position, see
 ``serve/sampling.py``). ``paged=False`` keeps the dense contiguous lanes.
 
+**Prefix sharing** (paged, all-attention stacks): prompts that share a
+page-aligned token prefix with an earlier request — a popular system
+prompt, a duplicate query, a preempted continuation resuming — skip both
+the *compute* and the *writes* for that prefix: the scheduler's probe
+admits them solo, the engine maps the shared physical pages into the new
+lane (``PagePool.map_shared``), and one *suffix prefill* computes only the
+remaining tokens while attending to the shared prefix KV gathered
+straight out of the pool. Copy-on-write keeps sharing invisible: any
+write that would land in a shared page (the suffix spilling into a
+partially-shared tail page, a ring lane wrapping past its window, a
+resumed continuation growing again) first duplicates it.
+``prefix_share=False`` disables the cache.
+
 ``stats`` records one entry per prefill sweep (legacy keys ``rows`` /
 ``n_requests`` / ``utilization``); ``decode_stats`` aggregates the per-step
 slot utilization, token counts, the predicated-attention blocks-visited
 accounting, and — in paged mode — ``kv_memory_ratio`` (mean pages in use
-over pool capacity, the footprint metric) and ``preemptions`` after
-:meth:`run`.
+over pool capacity, the footprint metric), ``preemptions``,
+``prefix_hit_ratio`` (prompt tokens served from shared pages over prompt
+tokens admitted) and ``pages_shared`` after :meth:`run`.
 """
 from __future__ import annotations
 
@@ -61,10 +75,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.packing import chunk_prompt
 from repro.kernels.common import resolve_decode_attn
 from repro.kernels.tda.ref import block_stats
 from repro.models.transformer import Model
 from repro.serve.kv_slots import SlotKVCache
+from repro.serve.pages import PrefixHit
 from repro.serve.sampling import sample_tokens
 from repro.serve.scheduler import Admission, Request, Scheduler
 
@@ -81,7 +97,7 @@ class Engine:
                  decode_attn: str = "auto",
                  decode_block_k: Optional[int] = None,
                  paged: bool = True, page_size: Optional[int] = None,
-                 pool_frac: float = 1.0,
+                 pool_frac: float = 1.0, prefix_share: bool = True,
                  temperature: float = 0.0, top_k: Optional[int] = None,
                  seed: int = 0):
         self.model = model
@@ -129,6 +145,16 @@ class Engine:
         self.slots = SlotKVCache(model, num_slots, self.cache_len,
                                  page_size=self.page_size,
                                  pool_frac=pool_frac)
+        # Page-level prefix sharing: only meaningful for paged stacks whose
+        # cache is *entirely* per-token kv lanes — a recurrent layer would
+        # need its end-of-prefix state, which is neither paged nor
+        # content-addressable, so hybrids and SSM stacks degrade to cold
+        # prefills (probe never fires).
+        self.prefix_share = bool(prefix_share) and self.paged and all(
+            s == "kv" for s in jax.tree.leaves(self.slots.specs))
+        self._shared_tokens = 0
+        self._prompt_tokens = 0
+        self._pages_shared = 0
         # Static layer -> lane-width map for the paged decode step: one
         # width for uniform stacks, per-layer (None on recurrent layers)
         # otherwise. Derived from the slot table's per-leaf widths — the
@@ -170,6 +196,19 @@ class Engine:
                 mesh=mesh)
             return logits, new_caches
 
+        def prefill_shared_fn(params, batch, pk, pv, plen):
+            # Suffix prefill over a shared prefix: the row holds only the
+            # suffix tokens (absolute positions in batch["positions"]);
+            # every attention layer prepends the gathered prefix KV. The
+            # fresh cache holds suffix K/V at row positions [0, suffix) —
+            # the lane assign scatters them behind the shared pages.
+            rows, width = batch["inputs"].shape
+            caches = model.init_cache(rows, width, ring=False)
+            logits, new_caches, _ = model.apply(
+                params, batch, caches=caches, cache_index=jnp.int32(0),
+                mesh=mesh, prefix_kv={"k": pk, "v": pv, "len": plen})
+            return logits, new_caches
+
         def decode_fn(params, tokens, caches, lengths, active, seeds,
                       tables):
             pages = None
@@ -203,6 +242,8 @@ class Engine:
         # update it in place (CPU doesn't implement donation; skip there).
         donate = (2,) if jax.default_backend() != "cpu" else ()
         self._prefill = jax.jit(prefill_fn)
+        self._prefill_shared = jax.jit(prefill_shared_fn) \
+            if self.prefix_share else None
         self._decode = jax.jit(decode_fn, donate_argnums=donate)
         if self.temperature > 0:
             t, tk = self.temperature, self.top_k
@@ -232,6 +273,9 @@ class Engine:
         cur = np.zeros(self.num_slots, np.int32)      # next input token
         emitted = np.zeros(self.num_slots, np.int32)  # tokens emitted so far
         budget = np.zeros(self.num_slots, np.int32)
+        self._shared_tokens = 0   # prompt tokens served from shared pages
+        self._prompt_tokens = 0   # prompt tokens admitted (incl. resumes)
+        self._pages_shared = 0    # page mappings served from the cache
         steps = 0
         active_slot_steps = 0
         decoded_tokens = 0
@@ -309,17 +353,28 @@ class Engine:
             "kv_memory_ratio": (
                 pages_used_steps / max(steps * sl.pool.total_pages, 1)
                 if self.paged else 1.0),
+            # Prefix sharing: fraction of admitted prompt tokens whose KV
+            # came from shared pages (no recompute, no rewrite), and the
+            # number of page mappings the prefix cache served.
+            "prefix_hit_ratio": (self._shared_tokens
+                                 / max(self._prompt_tokens, 1)),
+            "pages_shared": self._pages_shared,
         }
         return done
 
     # ------------------------------------------------------------------
 
     def _ensure_pages(self) -> int:
-        """Page in every active slot's next write position (oldest request
-        first). When the pool is dry, preempt-and-requeue the *youngest*
-        active request until the write fits; returns the preemption count.
-        The oldest request can always make progress: if it holds the only
-        pages left, its own lane is already fully resident."""
+        """Make every active slot's next write position writable (oldest
+        request first): allocate missing pages, copy-on-write pages other
+        slots still share (a ring lane wrapping into the shared prefix),
+        and unpublish sole-owner pages the prefix cache still indexes —
+        a shared or published page is never mutated in place. When the
+        pool is dry (free list empty *and* no refcount-0 retained pages
+        left to evict), preempt-and-requeue the *youngest* active request
+        until the write fits; returns the preemption count. The oldest
+        request can always make progress: preempting every other holder
+        drives its pages' refcounts to one."""
         sl, pool = self.slots, self.slots.pool
         n_preempt = 0
         order = sorted(np.flatnonzero(sl.active),
@@ -327,7 +382,12 @@ class Engine:
         for s in order:
             if not sl.active[s]:
                 continue  # preempted as a victim earlier in this pass
-            while not pool.ensure_write(int(s), int(sl.lengths[s])):
+            while True:
+                ok, copies = pool.make_writable(int(s), int(sl.lengths[s]))
+                if ok:
+                    if copies:
+                        sl.copy_pages(copies)
+                    break
                 victims = np.flatnonzero(sl.active)
                 victim = int(max(victims, key=lambda v: self._admit_seq[v]))
                 if victim == s and victims.size == 1:
@@ -338,6 +398,73 @@ class Engine:
                 if victim == s:
                     break
         return n_preempt
+
+    # ------------------------------------------------------------------
+    # prefix sharing: probe + hit-aware page reservation
+    # ------------------------------------------------------------------
+
+    def _probe(self, prompt) -> Optional[PrefixHit]:
+        """Prefix-cache lookup for a prompt (None when sharing is off or
+        nothing matches)."""
+        if not self.prefix_share:
+            return None
+        return self.slots.pool.probe_prefix(np.asarray(prompt, np.int32))
+
+    def _probe_req(self, req: Request) -> Optional[PrefixHit]:
+        """Memoized per-request probe: one admission is consulted up to
+        three times (grouping, reservation, prefill) and a head-blocked
+        queue front re-consults every engine step — re-hashing the prompt
+        each time is pure waste while the prefix index is unchanged, so
+        the hit is cached against ``PagePool.prefix_version``. The memo
+        also keys on the pool *identity*: a Request object reused across
+        engines must never replay a hit holding another pool's physical
+        page ids."""
+        pool = self.slots.pool
+        ver = pool.prefix_version
+        memo = getattr(req, "_probe_memo", None)
+        if memo is not None and memo[0] is pool and memo[1] == ver:
+            return memo[2]
+        hit = self._probe(req.prompt)
+        req._probe_memo = (pool, ver, hit)  # type: ignore[attr-defined]
+        return hit
+
+    def _page_reserve(self):
+        """Admission-control closure over the page budget, accounting for
+        expected prefix-cache hits: a request with a resident prefix
+        reserves only its *new* pages — lane pages minus shared ones, plus
+        any shared page its writes will copy-on-write — and additionally
+        pins the refcount-0 (retained) pages it will resurrect, since
+        those stop being evictable the moment it maps them. Budgets are
+        per width class over ``free + retained`` (retained pages are
+        evictable on demand), so admission never overcommits even when an
+        earlier admission in the same round evicts a probed page."""
+        pool = self.slots.pool
+        ps = pool.page_size
+        avail = {w: c.available() for w, c in pool.classes.items()}
+
+        def reserve(req: Request) -> bool:
+            L = len(req.prompt)
+            hit = self._probe_req(req)
+            consume = {}
+            for w, c in pool.classes.items():
+                need = -(-min(L + 1, c.width) // ps)
+                if hit is not None:
+                    shared = -(-hit.n_shared // ps)
+                    writes = {(p % c.width) // ps
+                              for p in range(hit.n_shared, L + 1)}
+                    cow = sum(1 for lp in writes if lp < shared)
+                    r0 = sum(1 for pg in hit.pages[w]
+                             if c.refcount[pg] == 0)
+                    consume[w] = need - shared + cow + r0
+                else:
+                    consume[w] = need
+            if any(n > avail[w] for w, n in consume.items()):
+                return False
+            for w, n in consume.items():
+                avail[w] -= n
+            return True
+
+        return reserve
 
     def _preempt(self, slot: int) -> None:
         """Requeue the slot's request as a continuation: its prompt plus
@@ -366,30 +493,45 @@ class Engine:
         # loop grows active lanes *before* admitting, so a fresh admission
         # neither overcommits a class nor steals a page an in-flight lane
         # needs this step — it always reaches its first decode step.
+        # Requests with a resident prompt prefix reserve only their net-new
+        # pages (_page_reserve) and are admitted solo via the probe.
+        def probe_len(req: Request) -> int:
+            hit = self._probe_req(req)
+            return hit.n_shared if hit is not None else 0
+
         groups = self.scheduler.next_admissions(
-            len(free), reserve=pool.reserver() if pool else None)
+            len(free), reserve=self._page_reserve() if pool else None,
+            probe=probe_len if self.prefix_share else None)
         fi = 0
         for adm in groups:
-            logits, caches, slots_of = self._prefill_admission(adm)
+            logits, caches, slots_of, hit = self._prefill_admission(adm)
             logits = np.asarray(logits)
             assigns = []  # whole group lands in ONE fused lane copy
+            pubs = []     # (slot, full token sequence) to publish
             for i, req in enumerate(adm.requests):
                 # A requeued continuation carries its original request in
                 # _origin: tokens and budgets accrue there, and the caller
                 # gets the object it submitted back.
                 target = getattr(req, "_origin", req)
-                row, start, length = slots_of[i]
+                row, start, length, off = slots_of[i]
+                total = off + length  # lane depth; off > 0 => shared prefix
                 total_budget = min(target.max_new_tokens, self.max_new)
                 if len(target.output) >= total_budget:
                     done.append(target)  # nothing (left) to generate
                     continue
+                # Hit accounting covers every suffix prefill — including
+                # requests that finish at prefill below (their prefix
+                # compute was saved all the same; only the page *mappings*
+                # require a slot).
+                self._prompt_tokens += total
+                self._shared_tokens += off
                 seed = np.uint32(
                     (target.seed if target.seed is not None
                      else self._base_seed + target.rid) & 0xFFFFFFFF)
                 if self.temperature > 0:
                     first = int(self._sample1(
                         jnp.asarray(logits[row, start + length - 1]),
-                        jnp.asarray(seed), jnp.int32(length)))
+                        jnp.asarray(seed), jnp.int32(total)))
                 else:
                     first = int(np.argmax(logits[row, start + length - 1]))
                 target.output.append(first)
@@ -398,7 +540,15 @@ class Engine:
                     continue
                 slot = int(free[fi])
                 fi += 1
-                assigns.append((slot, target, row, start, length))
+                if off:
+                    # Point the fresh lane's block tables at the shared
+                    # pages before assign_many allocates the remainder.
+                    pool.map_shared(slot, hit)
+                    self._pages_shared += sum(
+                        len(v) for v in hit.pages.values())
+                assigns.append((slot, target, row, start, length, off))
+                if self.prefix_share:
+                    pubs.append((slot, req.prompt))
                 cur[slot] = first
                 emitted[slot] = len(target.output)
                 budget[slot] = total_budget
@@ -406,10 +556,37 @@ class Engine:
                 self._admit_seq[slot] = self._seq
                 self._seq += 1
             self.slots.assign_many(assigns, caches)
+            # Publish after the fused copy: only then do the lane's full
+            # pages hold their final, content-addressable bytes.
+            for slot, toks in pubs:
+                pool.publish_prefix(slot, np.asarray(toks, np.int32))
 
     def _prefill_admission(self, adm: Admission):
         """Run one prefill sweep; returns (all-position logits, filled
-        caches, per-request (row, start, length))."""
+        caches, per-request (row, start, length, offset), prefix hit).
+        ``offset`` is nonzero only for a shared-prefix admission: the
+        request's first ``offset`` tokens came from mapped pages and only
+        the suffix rode the sweep."""
+        hit = None
+        if adm.shared_prefix:
+            # Re-probe at prefill time: the scheduler's estimate may be
+            # stale (pages evicted since) or short (pages published by an
+            # earlier group this round). A full miss degrades to a cold
+            # solo prefill below. (The memo makes this free while the
+            # prefix index is unchanged.)
+            req = adm.requests[0]
+            hit = self._probe_req(req)
+            if hit is not None:
+                batch, ids, suf = self._shared_batch(req, hit)
+                pk, pv = self.slots.gather_prefix(ids)
+                logits, caches = self._prefill_shared(
+                    self.params, batch, pk, pv, jnp.int32(hit.n_shared))
+                width = batch["inputs"].shape[1]
+                self.stats.append({"rows": 1, "n_requests": 1,
+                                   "utilization": suf / width})
+                return logits, caches, [(0, 0, suf, hit.n_shared)], hit
+            adm = Admission(requests=[req],
+                            chunks=chunk_prompt(req.prompt, self.max_len))
         if adm.packed is not None:
             packed = adm.packed
             rows = packed.rows
@@ -421,7 +598,7 @@ class Engine:
             batch = {"inputs": jnp.asarray(np.pad(packed.tokens, pad)),
                      "positions": jnp.asarray(np.pad(packed.positions, pad)),
                      "seg_ids": jnp.asarray(np.pad(packed.segment_ids, pad))}
-            slots_of = packed.request_slots
+            slots_of = [(r, s, l, 0) for r, s, l in packed.request_slots]
         elif adm.chunks is not None:  # solo long prompt
             prompt = np.concatenate(adm.chunks)
             width = len(adm.chunks) * self.max_len
@@ -434,14 +611,45 @@ class Engine:
                      "positions": jnp.asarray(
                          np.arange(width, dtype=np.int32)[None]),
                      "seg_ids": jnp.asarray(seg)}
-            slots_of = [(0, 0, L)]
+            slots_of = [(0, 0, L, 0)]
             rows = 1
         else:  # row-per-request (recurrent stacks), right-aligned
             batch, slots_of, rows = self._rows_batch(adm)
         logits, caches = self._prefill(self.params, batch)
         self.stats.append({"rows": rows, "n_requests": len(adm.requests),
                            "utilization": adm.utilization})
-        return logits, caches, slots_of
+        return logits, caches, slots_of, None
+
+    def _shared_batch(self, req: Request, hit: PrefixHit):
+        """Solo suffix-prefill layout: the row carries tokens
+        ``prompt[n_shared:]`` at absolute positions, padded to a
+        ``max_len`` multiple; the prefix rides as padded per-class page-id
+        arrays for :meth:`SlotKVCache.gather_prefix` (padding clamps to
+        garbage pages the sweep masks via segment ids). Both paddings
+        bound the set of compiled suffix shapes."""
+        pool = self.slots.pool
+        prompt = np.asarray(req.prompt, np.int32)
+        L, n = len(prompt), hit.n_shared
+        suf = L - n
+        width = -(-suf // self.max_len) * self.max_len
+        tokens = np.zeros((1, width), np.int32)
+        seg = np.zeros((1, width), np.int32)
+        pos = np.zeros((1, width), np.int32)
+        tokens[0, :suf] = prompt[n:]
+        seg[0, :suf] = 1
+        pos[0, :suf] = np.arange(n, L, dtype=np.int32)
+        batch = {"inputs": jnp.asarray(tokens),
+                 "positions": jnp.asarray(pos),
+                 "seg_ids": jnp.asarray(seg)}
+        np_pad = -(-n // self.max_len) * self.max_len  # padded prefix len
+        n_pages = -(-np_pad // pool.page_size)
+        ids = {}
+        for w, pages in hit.pages.items():
+            c = pool.classes[w]
+            padded = np.full(n_pages, c.FREE, np.int32)
+            padded[:len(pages)] = pages
+            ids[w] = padded
+        return batch, ids, suf
 
     def _rows_batch(self, adm: Admission):
         """Row-per-request prefill layout for stacks with recurrent state:
@@ -468,7 +676,7 @@ class Engine:
             tokens[i, start:] = req.prompt
             seg[i, start:] = 1
             pos[i, start:] = np.arange(L)
-            slots_of.append((i, start, L))
+            slots_of.append((i, start, L, 0))
         batch = {"inputs": jnp.asarray(tokens),
                  "positions": jnp.asarray(pos),
                  "seg_ids": jnp.asarray(seg)}

@@ -46,6 +46,16 @@ allocate/free pages, and the fused assign copy scatters through the block
 tables (unallocated entries carry the out-of-bounds ``FREE`` sentinel, so
 their updates are dropped). ``"state"`` lanes are never paged.
 
+Prefix sharing rides the same fused copy: an assignment may carry a
+*destination offset* — the first ``offset`` lane positions are backed by
+shared pages another request already wrote (``PagePool.map_shared``), the
+prefill computed only the suffix, and the scatter drops every position
+outside ``[offset, total)`` so shared pages are never touched. The two
+device-side helpers the sharing machinery needs also live here:
+:meth:`copy_pages` (the copy half of copy-on-write) and
+:meth:`gather_prefix` (materialize a dequantized prefix-KV view out of
+the pool for the suffix prefill's attention).
+
 Per-step slot occupancy (`utilization()`) is the serving analogue of the
 paper's PE-utilization metric: idle lanes are idle PEs under a shared weight
 sweep; in paged mode ``pool.memory_ratio()`` is the matching *footprint*
@@ -60,12 +70,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.tda.ops import paged_flat_positions
+from repro.models.layers import kv_dequantize
 from repro.models.transformer import Model
 from repro.serve.pages import PagePool
 
 __all__ = ["SlotKVCache", "SlotStateTable"]
 
-# (slot, request, row, start, length) — one admitted request's lane copy.
+# (slot, request, row, start, length[, offset]) — one admitted request's
+# lane copy. ``offset`` (default 0) is the lane position the copied
+# segment starts at: positions [0, offset) are already backed by shared
+# prefix pages (paged mode only) and must not be written.
 Assignment = Tuple[int, Any, int, int, int]
 
 
@@ -89,6 +103,7 @@ class SlotKVCache:
         self.cache_len = cache_len
         self.page_size = page_size
         cfg = model.cfg
+        self._dtype = cfg.compute_dtype
         self._stacked = cfg.uniform_layers  # leaves carry a leading L dim
         self.specs = model.cache_lane_specs()  # "kv" | "state" per leaf
         ba = 1 if self._stacked else 0
@@ -127,9 +142,16 @@ class SlotKVCache:
         # donating the slot cache lets accelerators update it in place (CPU
         # doesn't implement donation, so skip the warning there).
         donate = (0,) if jax.default_backend() != "cpu" else ()
+        self._donate = donate
         fn = self._copy_lane_paged if self.pool is not None \
             else self._copy_lane
         self._copy = jax.jit(fn, donate_argnums=donate)
+        # Lazily built per width class: the device half of copy-on-write
+        # (one jitted whole-page copy across every kv leaf of that width)
+        # and the jitted prefix-KV gather for suffix prefills.
+        self._copiers: dict = {}
+        self._prefix_gather = jax.jit(self._gather_prefix_fn) \
+            if self.pool is not None else None
 
     # ------------------------------------------------------------------
 
@@ -140,33 +162,47 @@ class SlotKVCache:
         return float(self.active.mean())
 
     def _gather_lanes(self, src, rows, starts, lengths, width, out_width,
-                      dtype):
+                      dtype, offs=None):
         """Gather assignment segments into canonical ring phase: lane
         position ``p`` holds token ``base + ((p - base) % width)`` with
         ``base = max(len - width, 0)`` — for full lanes (``width`` >= len)
         this degenerates to token ``p`` at position ``p``. Positions past
         ``min(len, width)`` (and the ``out_width > width`` tail of a
-        page-quantized lane) are zeroed; decode masks them anyway. Shared
-        by the contiguous and paged fused copies so the phase math cannot
-        drift between layouts."""
+        page-quantized lane) are invalid (zeroed by the contiguous copy,
+        dropped by the paged scatter). Shared by the contiguous and paged
+        fused copies so the phase math cannot drift between layouts.
+
+        ``offs`` (suffix assigns onto a shared prefix): ``lengths`` is the
+        *total* lane depth but the source row holds only the suffix
+        tokens ``[offs, lengths)`` starting at row position ``starts``;
+        positions below ``offs`` are invalid (they live in shared pages).
+        Sharing guarantees ``lengths <= width`` whenever ``offs > 0``
+        (an unwrapped lane), so the ring-phase base is 0 on that path.
+        Returns ``(lanes, valid)``: the gathered values and the validity
+        mask, both over ``(J, out_width)``."""
         ba = 1 if self._stacked else 0  # batch axis of every cache leaf
         J = rows.shape[0]
         wsrc = src.shape[ba + 1]
+        if offs is None:
+            offs = jnp.zeros_like(lengths)
         base = jnp.maximum(lengths - width, 0)[:, None]  # (J, 1)
         pgrid = jnp.arange(out_width)[None, :]  # (1, out_width)
         tok = base + jnp.mod(pgrid - base, width)  # (J, out_width) token ix
-        seq_pos = starts[:, None] + tok  # (J, out_width) source row position
-        valid = pgrid < jnp.minimum(lengths, width)[:, None]
+        # source row position of token ``tok`` (row holds [offs, lengths))
+        seq_pos = starts[:, None] + tok - offs[:, None]
+        valid = ((pgrid < jnp.minimum(lengths, width)[:, None])
+                 & (pgrid >= offs[:, None]))
         sel = jnp.take(src, rows, axis=ba)  # (L?, J, wsrc, ...)
         idx = jnp.clip(seq_pos, 0, wsrc - 1)
         ishape = (1,) * ba + (J, out_width) + (1,) * (sel.ndim - ba - 2)
         lanes = jnp.take_along_axis(sel, idx.reshape(ishape),
                                     axis=ba + 1)  # (L?, J, out_width, ...)
         vshape = (1,) * ba + (J, out_width) + (1,) * (lanes.ndim - ba - 2)
-        return jnp.where(valid.reshape(vshape), lanes, 0).astype(dtype)
+        lanes = jnp.where(valid.reshape(vshape), lanes, 0).astype(dtype)
+        return lanes, valid
 
     def _copy_lane(self, dst_caches, src_caches, slots, rows, starts,
-                   lengths):
+                   lengths, offs=None):
         """Copy every assignment j's state out of ``src[rows[j]]`` into lane
         ``slots[j]`` in one fused gather + scatter per cache leaf — no
         per-slot Python loop, no O(num_slots) one-hot select. Static shapes
@@ -188,9 +224,11 @@ class SlotKVCache:
                     return dst.at[slots].set(sel.astype(dst.dtype))
                 return dst.at[:, slots].set(sel.astype(dst.dtype))
             # "kv": per-token lane; ring width is the leaf's own seq dim.
+            # (offs is always zero here: prefix sharing is paged-only, so
+            # whole-lane overwrite with zeroed invalid positions is safe.)
             ring = dst.shape[ba + 1]
-            lanes = self._gather_lanes(src, rows, starts, lengths, ring,
-                                       ring, dst.dtype)
+            lanes, _ = self._gather_lanes(src, rows, starts, lengths, ring,
+                                          ring, dst.dtype)
             # Padding entries carry slot == num_slots: out-of-bounds
             # scatter updates are dropped (JAX default), so they cost
             # nothing and real slots stay unique.
@@ -201,14 +239,17 @@ class SlotKVCache:
         return jax.tree.map(per_leaf, dst_caches, src_caches, self.specs)
 
     def _copy_lane_paged(self, dst_caches, src_caches, slots, rows, starts,
-                         lengths, tables):
+                         lengths, offs, tables):
         """Paged variant of :meth:`_copy_lane`: the gather side
         (:meth:`_gather_lanes` over the leaf's *logical* width) is shared;
         the scatter side routes every lane position through the slot's
         block table — position ``p`` lands in physical page ``bt[slot, p //
         page_size]`` at offset ``p % page_size``. Sentinel table entries
         (unallocated pages, and the padded ``slot == num_slots`` row)
-        produce out-of-bounds flat positions, which the scatter drops."""
+        produce out-of-bounds flat positions, which the scatter drops —
+        and so does every position outside ``[offs, total)``, which is
+        what keeps shared prefix pages (below ``offs``) byte-identical
+        while the suffix lands around them."""
         ba = 1 if self._stacked else 0
         ps = self.page_size
 
@@ -220,11 +261,14 @@ class SlotKVCache:
                 return dst.at[:, slots].set(sel.astype(dst.dtype))
             bt = tables[w]  # (num_slots + 1, lane_pages), sentinel row last
             W = bt.shape[1] * ps  # page-quantized width (tail never read)
-            lanes = self._gather_lanes(src, rows, starts, lengths, w, W,
-                                       dst.dtype)
+            lanes, valid = self._gather_lanes(src, rows, starts, lengths,
+                                              w, W, dst.dtype, offs)
             pages = jnp.take(bt, slots, axis=0)  # (J, lane_pages)
             flatpos = paged_flat_positions(pages, ps)  # (J, W)
             P = dst.shape[ba]
+            # Invalid positions scatter out of bounds (dropped) instead of
+            # writing zeros: a lane's pages may be shared with other slots.
+            flatpos = jnp.where(valid, flatpos, P * ps)
             dstf = dst.reshape(dst.shape[:ba] + (P * ps,)
                                + dst.shape[ba + 2:])
             if ba == 0:
@@ -249,29 +293,42 @@ class SlotKVCache:
         """Claim several slots in one fused lane copy.
 
         ``assignments`` is a list of ``(slot, request, row, start, length)``
-        drawn from ONE prefill's ``src_caches``. For per-token lanes, rows
-        of a packed prefill interleave several requests and segment masking
-        made each one's K/V identical to an unpacked computation; the source
-        must be full-length (``init_cache(..., ring=False)``) so windowed
-        segments are addressable. For recurrent state lanes the engine
-        prefills one request per row (right-aligned, padding masked to
-        identity updates), so ``src_caches[row]``'s end-of-row state is
-        exactly the request's state. Either way the gathered lanes decode
-        exactly as if each request had been prefilled alone, and the whole
-        admission round is a single jitted gather+scatter instead of one
-        dispatch per request. A reassigned lane is overwritten wholesale —
-        no state survives a release→assign cycle.
+        (optionally ``+ (offset,)``) drawn from ONE prefill's
+        ``src_caches``. For per-token lanes, rows of a packed prefill
+        interleave several requests and segment masking made each one's
+        K/V identical to an unpacked computation; the source must be
+        full-length (``init_cache(..., ring=False)``) so windowed segments
+        are addressable. For recurrent state lanes the engine prefills one
+        request per row (right-aligned, padding masked to identity
+        updates), so ``src_caches[row]``'s end-of-row state is exactly the
+        request's state. Either way the gathered lanes decode exactly as
+        if each request had been prefilled alone, and the whole admission
+        round is a single jitted gather+scatter instead of one dispatch
+        per request. A reassigned lane is overwritten wholesale — no state
+        survives a release→assign cycle.
+
+        A nonzero ``offset`` (paged mode only) means lane positions
+        ``[0, offset)`` are already backed by shared prefix pages the
+        engine mapped via ``PagePool.map_shared``: the source row holds
+        only the suffix ``[offset, offset + length)``, the lane's total
+        depth becomes ``offset + length``, and shared pages overlapping
+        the write range ``[offset, total]`` are copy-on-written first so
+        no other holder ever observes the write.
         """
         if not assignments:
             return
-        for slot, _, _, _, length in assignments:
+        norm = [(a[0], a[1], a[2], a[3], a[4],
+                 a[5] if len(a) > 5 else 0) for a in assignments]
+        for slot, _, _, _, length, off in norm:
             if self.active[slot]:
                 raise ValueError(f"slot {slot} is already occupied")
-            if length > self.cache_len:
+            if off and self.pool is None:
+                raise ValueError("offset assigns require the paged layout")
+            if off + length > self.cache_len:
                 raise ValueError(
-                    f"request length {length} exceeds cache_len "
+                    f"request length {off + length} exceeds cache_len "
                     f"{self.cache_len}")
-        slots = [a[0] for a in assignments]
+        slots = [a[0] for a in norm]
         if len(set(slots)) != len(slots):
             raise ValueError(f"duplicate slots in one admission: {slots}")
         if self.pool is not None:
@@ -279,39 +336,135 @@ class SlotKVCache:
             # one position past the prompt, so the page the engine's
             # admission reserved for the first decode write is actually
             # *held*, not just virtually counted (otherwise an older lane
-            # growing in the same step could still snatch it). An exhausted
-            # pool rolls the whole round back (the engine's page budget
-            # makes that unreachable in normal operation).
-            allocated = []
+            # growing in the same step could still snatch it) — and
+            # copy-on-write any shared page the suffix (or that first
+            # decode write) lands in. An exhausted pool rolls the whole
+            # round back (the engine's page budget makes that unreachable
+            # in normal operation).
+            attempted = []
+            copies = []
             try:
-                for slot, _, _, _, length in assignments:
+                for slot, _, _, _, length, off in norm:
+                    total = off + length
+                    attempted.append(slot)
                     self.pool.alloc_prefix(slot,
-                                           min(length + 1, self.cache_len))
-                    allocated.append(slot)
+                                           min(total + 1, self.cache_len))
+                    if off:
+                        # [off, total] — the suffix scatter plus the first
+                        # decode write (position ``total``, ring-wrapped).
+                        copies += self.pool.make_range_writable(
+                            slot, off, total + 1)
             except RuntimeError:
-                for slot in allocated:
+                for slot in attempted:
                     self.pool.release(slot)
                 raise
+            if copies:
+                self.copy_pages(copies)
         # Pad the round to a power of two: bounds jit variants of the fused
         # copy to log2(num_slots)+1 per source width (same idiom as the
         # engine's packed-prefill row padding). Padding entries scatter to
         # the out-of-bounds sentinel slot and are dropped.
-        J = 1 << (len(assignments) - 1).bit_length()
-        pad = J - len(assignments)
+        J = 1 << (len(norm) - 1).bit_length()
+        pad = J - len(norm)
         args = (
             jnp.asarray(slots + [self.num_slots] * pad, jnp.int32),
-            jnp.asarray([a[2] for a in assignments] + [0] * pad, jnp.int32),
-            jnp.asarray([a[3] for a in assignments] + [0] * pad, jnp.int32),
-            jnp.asarray([a[4] for a in assignments] + [0] * pad, jnp.int32))
+            jnp.asarray([a[2] for a in norm] + [0] * pad, jnp.int32),
+            jnp.asarray([a[3] for a in norm] + [0] * pad, jnp.int32),
+            jnp.asarray([a[4] + a[5] for a in norm] + [0] * pad, jnp.int32),
+            jnp.asarray([a[5] for a in norm] + [0] * pad, jnp.int32))
         if self.pool is not None:
             self.caches = self._copy(self.caches, src_caches, *args,
                                      self.pool.device_tables())
         else:
             self.caches = self._copy(self.caches, src_caches, *args)
-        for slot, request, _, _, length in assignments:
+        for slot, request, _, _, length, off in norm:
             self.active[slot] = True
-            self.lengths[slot] = length
+            self.lengths[slot] = off + length
             self.request[slot] = request
+
+    # -- prefix-sharing device helpers ---------------------------------
+
+    def copy_pages(self, copies: Sequence[Tuple[int, int, int]]) -> None:
+        """Execute copy-on-write page copies: for each ``(width, src,
+        dst)``, duplicate physical page ``src`` into ``dst`` across every
+        kv leaf of that width class (k/v and their scales move in
+        lockstep). Copies are batched — one jitted gather+scatter per
+        width per call, page-id arrays padded to a power of two (same
+        compile-bounding idiom as the fused assign copy); padding scatters
+        out of bounds and is dropped."""
+        by_width: dict = {}
+        for w, src, dst in copies:
+            by_width.setdefault(w, []).append((src, dst))
+        for w, pairs in by_width.items():
+            fn = self._copiers.get(w)
+            if fn is None:
+                ba = 1 if self._stacked else 0
+
+                def copier(caches, srcs, dsts, _w=w):
+                    def per_leaf(leaf, spec, lw):
+                        if spec != "kv" or lw != _w:
+                            return leaf
+                        # OOB padding: gather clamps (garbage), scatter
+                        # drops — the pad pair writes nowhere.
+                        if ba == 0:
+                            return leaf.at[dsts].set(leaf[srcs],
+                                                     mode="drop")
+                        return leaf.at[:, dsts].set(leaf[:, srcs],
+                                                    mode="drop")
+
+                    return jax.tree.map(per_leaf, caches, self.specs,
+                                        self.widths)
+
+                fn = jax.jit(copier, donate_argnums=self._donate)
+                self._copiers[w] = fn
+            P = self.pool.classes[w].num_pages
+            n = 1 << (len(pairs) - 1).bit_length()
+            srcs = np.full(n, P, np.int32)
+            dsts = np.full(n, P, np.int32)
+            srcs[:len(pairs)] = [p[0] for p in pairs]
+            dsts[:len(pairs)] = [p[1] for p in pairs]
+            self.caches = fn(self.caches, jnp.asarray(srcs),
+                             jnp.asarray(dsts))
+
+    def gather_prefix(self, page_ids):
+        """Materialize a dense, dequantized prefix-KV view out of the page
+        pool for a suffix prefill: ``page_ids`` maps each width class to a
+        padded int32 array of physical pages (``FREE``-padded entries
+        clamp to garbage the prefill masks via its segment ids). Returns
+        ``(pk, pv)`` pytrees shaped like per-layer ``(L?, 1, n_pages *
+        page_size, Hkv, D)`` attention memories."""
+        ids = {w: jnp.asarray(v, jnp.int32) for w, v in page_ids.items()}
+        return self._prefix_gather(self.caches, ids)
+
+    def _gather_prefix_fn(self, caches, ids):
+        ba = 1 if self._stacked else 0
+        ps = self.page_size
+
+        def block(d, widths_d):
+            w = widths_d.get("k", 0) if isinstance(widths_d, dict) else 0
+            if not w:
+                return None, None  # state-lane layer: sharing is gated off
+            page_ix = jnp.clip(ids[w], 0, self.pool.classes[w].num_pages - 1)
+
+            def lanes(name):
+                leaf = jnp.take(d[name], page_ix, axis=ba)  # (L?, n, ps, ..)
+                sh = leaf.shape
+                leaf = leaf.reshape(sh[:ba] + (sh[ba] * sh[ba + 1],)
+                                    + sh[ba + 2:])
+                return jnp.expand_dims(leaf, ba)  # batch axis: (L?, 1, Np, ..)
+
+            k, v = lanes("k"), lanes("v")
+            if "k_scale" in d:
+                k = kv_dequantize(k, lanes("k_scale"), self._dtype)
+                v = kv_dequantize(v, lanes("v_scale"), self._dtype)
+            return k, v
+
+        if self._stacked:
+            return block(caches, self.widths)
+        out_k, out_v = {}, {}
+        for name, d in caches.items():
+            out_k[name], out_v[name] = block(d, self.widths[name])
+        return out_k, out_v
 
     def advance(self, slot: int) -> None:
         """One decoded token was written into the lane at ``lengths[slot]``

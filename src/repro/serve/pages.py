@@ -1,4 +1,5 @@
-"""Paged KV lane pool: block-table cache allocation for the slot table.
+"""Paged KV lane pool: block-table cache allocation for the slot table,
+with page-level prefix sharing and copy-on-write across requests.
 
 The contiguous :class:`~repro.serve.kv_slots.SlotKVCache` allocates every
 kv lane dense — ``num_slots x lane_width`` tokens per leaf no matter how
@@ -12,6 +13,35 @@ page ``i`` of its lane to a physical page (or the ``FREE`` sentinel).
 Lanes are allocated page-by-page as requests arrive and grow, and released
 pages return to a free list, so pages-in-use tracks live tokens, not
 capacity.
+
+**Prefix sharing** removes the remaining redundancy: requests whose
+prompts share a page-aligned token prefix share *physical* pages instead
+of re-writing identical KV bytes. The machinery:
+
+* Every full page a lane holds is content-addressed by a **chained hash**
+  of all prompt tokens up to the end of that page — page ``lp`` keys on
+  ``H(tokens[: (lp+1) * page_size])`` — because a token's K/V depends on
+  the *entire* prefix before it, not just the tokens stored in the page.
+  ``publish_prefix`` registers a freshly assigned lane's full pages in the
+  per-width-class index; ``probe_prefix`` walks a new prompt's chain and
+  returns the longest consecutive run of index hits (capped at
+  ``len(prompt) - 1`` so at least one suffix token is always recomputed).
+* ``map_shared`` points a new slot's block table at the hit pages and
+  bumps their **refcount** (the number of block-table references); pages
+  are freed only at refcount zero.
+* A page is never mutated while anyone else can see it: before any write
+  (the suffix-prefill scatter into a partially shared tail page, a ring
+  lane's decode write wrapping into the shared prefix, a preempt-resume
+  continuation growing again), ``make_writable`` / ``make_range_writable``
+  **copy-on-write** pages with refcount > 1 into fresh pages (the caller
+  performs the device-side copy), and *unpublish* refcount-1 pages that
+  are still in the prefix index.
+* When the last reference to a published page drops, the page is
+  **retained** — parked in a per-class LRU instead of the free list — so
+  later requests with the same prefix (including preempted-and-requeued
+  continuations) still hit it. Allocation draws from the free list first
+  and then evicts retained pages LRU-first, so the prefix cache gives
+  back memory *before* the engine has to preempt anyone.
 
 Layout invariants (the bridge to the rest of the serving stack):
 
@@ -31,6 +61,9 @@ Layout invariants (the bridge to the rest of the serving stack):
 * Block tables carry one extra sentinel *row* (index ``num_slots``) that
   stays all-``FREE`` forever: the fused assign copy pads admission rounds
   with ``slot == num_slots`` entries, which must scatter nowhere.
+* Ring classes publish/consume shared pages only for prompts that fit the
+  window (an unwrapped ring is chronological, so page content is
+  prefix-determined; a wrapped one is not).
 
 Lanes of the same logical width form a *width class* sharing one free list
 and one block table (``k``/``v``/scale leaves of one layer always allocate
@@ -43,16 +76,49 @@ property, and ``shuffle_free`` exists so tests can scramble the pool).
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
+from collections import Counter, OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["PagePool", "PageClass"]
+__all__ = ["PagePool", "PageClass", "PrefixHit", "prefix_digests"]
+
+# (width, src_page, dst_page): a device-side page copy the caller owes the
+# pool after a copy-on-write remap (SlotKVCache.copy_pages executes them).
+PageCopy = Tuple[int, int, int]
+
+
+def prefix_digests(tokens: np.ndarray, page_size: int,
+                   n_pages: int) -> List[str]:
+    """Chained per-page digests of a prompt: entry ``lp`` hashes **all**
+    tokens ``[0, (lp+1) * page_size)``, not just the page's own — K/V at a
+    position depend on the whole prefix before it, so equal page content
+    requires an equal full chain."""
+    h = hashlib.blake2b(digest_size=16)
+    out: List[str] = []
+    toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    for lp in range(n_pages):
+        h.update(toks[lp * page_size:(lp + 1) * page_size].tobytes())
+        out.append(h.hexdigest())
+    return out
+
+
+@dataclasses.dataclass
+class PrefixHit:
+    """One prompt's prefix-cache probe result: the first ``n_shared``
+    prompt tokens can be served by mapping ``pages[width]`` (physical page
+    ids, one list per width class) instead of recomputing them."""
+
+    n_shared: int
+    pages: Dict[int, List[int]]
 
 
 class PageClass:
-    """Bookkeeping for one lane width: free list + per-slot block table."""
+    """Bookkeeping for one lane width: free list, per-slot block table,
+    per-page refcounts, and the prefix-cache index for this width."""
 
     def __init__(self, width: int, num_slots: int, page_size: int,
                  num_pages: int):
@@ -63,10 +129,24 @@ class PageClass:
         # +1 sentinel row (stays all-FREE) for padded assign entries.
         self.table = np.full((num_slots + 1, self.lane_pages), num_pages,
                              np.int32)
+        # Number of block-table references per physical page. A page is
+        # free/retained at 0 and shared at >= 2.
+        self.refcount = np.zeros(num_pages, np.int32)
+        # Prefix cache: (logical_page, chained_digest) -> physical page,
+        # plus the reverse map so a write can invalidate its page's entry.
+        self.index: Dict[Tuple[int, str], int] = {}
+        self.published: Dict[int, Tuple[int, str]] = {}
+        # refcount==0 pages kept alive for future prefix hits, LRU-ordered
+        # (oldest first); evicted before the engine ever has to preempt.
+        self.retained: "OrderedDict[int, None]" = OrderedDict()
 
     @property
     def FREE(self) -> int:
         return self.num_pages
+
+    def available(self) -> int:
+        """Pages obtainable right now: free plus evictable retained."""
+        return len(self.free) + len(self.retained)
 
 
 class PagePool:
@@ -96,6 +176,11 @@ class PagePool:
                             int(np.ceil(pool_frac * num_slots * lane_pages)))
             self.classes[w] = PageClass(w, num_slots, page_size, num_pages)
         self._dev: Optional[Dict[int, jnp.ndarray]] = None
+        # Bumped whenever the prefix index changes (publish/unpublish):
+        # probe results are a pure function of the index, so callers can
+        # memoize a hit against this counter instead of re-hashing a
+        # head-blocked prompt every engine step.
+        self.prefix_version = 0
 
     # -- capacity queries ----------------------------------------------
 
@@ -104,10 +189,20 @@ class PagePool:
         return sum(c.num_pages for c in self.classes.values())
 
     def pages_in_use(self) -> int:
-        return sum(c.num_pages - len(c.free) for c in self.classes.values())
+        """Distinct pages mapped by at least one slot. Retained pages are
+        reclaimable prefix-cache, not live footprint — with sharing, two
+        slots mapping one page count it once (that is the saving)."""
+        return sum(c.num_pages - len(c.free) - len(c.retained)
+                   for c in self.classes.values())
+
+    def pages_shared(self) -> int:
+        """Block-table references served by an already-mapped page: the
+        page writes (and prefill compute) sharing avoided *right now*."""
+        return int(sum(np.maximum(c.refcount - 1, 0).sum()
+                       for c in self.classes.values()))
 
     def free_page_budget(self) -> int:
-        return sum(len(c.free) for c in self.classes.values())
+        return sum(c.available() for c in self.classes.values())
 
     def memory_ratio(self) -> float:
         """Pages in use / pool page capacity — the footprint analogue of
@@ -128,78 +223,244 @@ class PagePool:
 
     def can_alloc(self, n_tokens: int) -> bool:
         """Whether a fresh lane of ``n_tokens`` fits right now — checked
-        per class (a scalar free-page sum can lie when one class is dry)."""
-        return all(need <= len(self.classes[w].free)
+        per class (a scalar free-page sum can lie when one class is dry).
+        Retained pages count: they are evicted on demand."""
+        return all(need <= self.classes[w].available()
                    for w, need in self.class_needs(n_tokens).items())
 
-    def reserver(self, extra_tokens: int = 1):
-        """A stateful per-class reservation closure for admission control:
-        ``reserve(prompt_len)`` claims (virtually) the pages a lane
-        admitted at that length will use — ``extra_tokens`` ahead, so the
-        first decode write is covered too — and returns False, claiming
-        nothing, once any class would overcommit. The scheduler calls it
-        once per queue head (``Scheduler.next_admissions``)."""
-        free = {w: len(c.free) for w, c in self.classes.items()}
+    # The per-class virtual-reservation closure for admission control
+    # lives in ``Engine._page_reserve`` (it needs the prefix-cache probe
+    # to discount expected hits); the pool only exposes the budget
+    # primitives it is built from (``class_needs`` / ``available`` /
+    # ``refcount``), so there is exactly one copy of the accounting.
 
-        def reserve(prompt_len: int) -> bool:
-            needs = self.class_needs(prompt_len + extra_tokens)
-            if any(n > free[w] for w, n in needs.items()):
-                return False
-            for w, n in needs.items():
-                free[w] -= n
-            return True
+    # -- prefix cache ---------------------------------------------------
 
-        return reserve
+    def probe_prefix(self, tokens: np.ndarray) -> Optional[PrefixHit]:
+        """Longest shareable prefix of ``tokens`` currently resident.
+
+        Per class, matches consecutive chained-digest keys from logical
+        page 0; the shareable token count is the **minimum** over classes
+        (a suffix prefill computes every layer from the same boundary),
+        capped at ``len(tokens) - 1`` so at least the last token is always
+        recomputed — that re-derivation is what yields the next-token
+        logits. Classes whose ring would wrap (``len > width``) cannot
+        share (wrapped content is not prefix-determined), which zeroes the
+        minimum. Returns None on a miss."""
+        L = len(tokens)
+        ps = self.page_size
+        m_max = L // ps
+        if m_max == 0:
+            return None
+        digests = prefix_digests(tokens, ps, m_max)
+        m = m_max
+        for c in self.classes.values():
+            if L > c.width:
+                return None  # this class's lane wraps: nothing to share
+            mc = 0
+            while mc < m and (mc, digests[mc]) in c.index:
+                mc += 1
+            m = min(m, mc)
+            if m == 0:
+                return None
+        n_shared = min(m * ps, L - 1)
+        k = -(-n_shared // ps)  # mapped pages cover [0, n_shared)
+        pages = {w: [c.index[(lp, digests[lp])] for lp in range(k)]
+                 for w, c in self.classes.items()}
+        return PrefixHit(n_shared=n_shared, pages=pages)
+
+    def map_shared(self, slot: int, hit: PrefixHit) -> None:
+        """Point ``slot``'s block tables at the hit pages (logical pages
+        ``0..k-1``) and take a reference on each; a retained page coming
+        back into service leaves the LRU."""
+        for w, page_list in hit.pages.items():
+            c = self.classes[w]
+            for lp, pg in enumerate(page_list):
+                assert c.table[slot, lp] == c.FREE, "slot lane not empty"
+                c.table[slot, lp] = pg
+                if c.refcount[pg] == 0:
+                    c.retained.pop(pg, None)
+                c.refcount[pg] += 1
+        if hit.pages:
+            self._dev = None
+
+    def publish_prefix(self, slot: int, tokens: np.ndarray) -> None:
+        """Register ``slot``'s freshly assigned full pages in the prefix
+        index. Only pages entirely covered by ``tokens[:-?]`` — i.e.
+        ``lp < len // page_size`` — are content-stable (the tail page is
+        about to take the first decode write); ring classes only publish
+        unwrapped lanes. First publisher of a key wins (identical content
+        by construction)."""
+        L = len(tokens)
+        ps = self.page_size
+        m = L // ps
+        if m == 0:
+            return
+        digests = prefix_digests(tokens, ps, m)
+        for c in self.classes.values():
+            if L > c.width:
+                continue  # wrapped ring: content not prefix-determined
+            for lp in range(m):
+                pg = int(c.table[slot, lp])
+                if pg == c.FREE:
+                    break
+                key = (lp, digests[lp])
+                if key in c.index or pg in c.published:
+                    continue
+                c.index[key] = pg
+                c.published[pg] = key
+                self.prefix_version += 1
 
     # -- allocation ----------------------------------------------------
 
+    def _unpublish(self, c: PageClass, pg: int) -> None:
+        key = c.published.pop(pg, None)
+        if key is not None:
+            c.index.pop(key, None)
+            self.prefix_version += 1
+
+    def _take_page(self, c: PageClass) -> Optional[int]:
+        """Draw a writable page: free list first, then evict the LRU
+        retained page (unpublishing it) — the prefix cache shrinks before
+        anyone is preempted."""
+        if c.free:
+            return c.free.pop()
+        if c.retained:
+            pg, _ = c.retained.popitem(last=False)
+            self._unpublish(c, pg)
+            return pg
+        return None
+
     def alloc_prefix(self, slot: int, n_tokens: int) -> None:
         """Allocate the logical-prefix pages covering positions
-        ``[0, min(n_tokens, width))`` in every class. All-or-nothing:
+        ``[0, min(n_tokens, width))`` in every class (entries already
+        mapped — e.g. shared prefix pages — are kept). All-or-nothing:
         raises ``RuntimeError`` (allocating nothing) if any class lacks
-        free pages — the scheduler's page budget makes that unreachable in
-        normal operation."""
+        obtainable pages — the scheduler's page budget makes that
+        unreachable in normal operation."""
         plan: List[Tuple[PageClass, int]] = []
+        needed: Dict[int, int] = {}
         for c in self.classes.values():
             need = -(-min(n_tokens, c.width) // self.page_size)
-            have = int(np.sum(c.table[slot] != c.FREE))
-            if need - have > len(c.free):
+            lps = [lp for lp in range(need) if c.table[slot, lp] == c.FREE]
+            if len(lps) > c.available():
                 raise RuntimeError(
                     f"page pool exhausted: class width={c.width} needs "
-                    f"{need - have} pages, {len(c.free)} free")
-            for lp in range(need):
-                if c.table[slot, lp] == c.FREE:
-                    plan.append((c, lp))
+                    f"{len(lps)} pages, {c.available()} obtainable")
+            needed[c.width] = len(lps)
+            plan.extend((c, lp) for lp in lps)
         for c, lp in plan:
-            c.table[slot, lp] = c.free.pop()
+            pg = self._take_page(c)
+            assert pg is not None  # guarded by the per-class check above
+            c.table[slot, lp] = pg
+            c.refcount[pg] = 1
         if plan:
             self._dev = None
 
-    def ensure_write(self, slot: int, length: int) -> bool:
+    def make_writable(self, slot: int,
+                      length: int) -> Tuple[bool, List[PageCopy]]:
         """Make position ``length`` (mod each ring width) writable for
-        ``slot``: allocate the page it lands on in every class that does
-        not have it yet. Returns False — allocating nothing — when any
-        class is out of free pages (the engine then preempts)."""
-        plan: List[Tuple[PageClass, int]] = []
+        ``slot``: allocate the page it lands on where missing,
+        **copy-on-write** it where shared (refcount > 1), and unpublish it
+        where it is the last reference but still in the prefix index.
+        All-or-nothing: returns ``(False, [])``, changing nothing, when
+        any class cannot obtain the pages it needs (the engine then
+        preempts). On success returns the device-side page copies the
+        caller must perform (``SlotKVCache.copy_pages``)."""
+        plan: List[Tuple[PageClass, int, Optional[int]]] = []  # (c, lp, src)
         for c in self.classes.values():
             lp = (length % c.width) // self.page_size
-            if c.table[slot, lp] == c.FREE:
-                if not c.free:
-                    return False
-                plan.append((c, lp))
-        for c, lp in plan:
-            c.table[slot, lp] = c.free.pop()
+            entry = int(c.table[slot, lp])
+            if entry == c.FREE:
+                plan.append((c, lp, None))  # plain allocation
+            elif c.refcount[entry] > 1:
+                plan.append((c, lp, entry))  # copy-on-write
+        counts = Counter(id(c) for c, _, _ in plan)
+        for c in self.classes.values():
+            if counts[id(c)] > c.available():
+                return False, []
+        copies: List[PageCopy] = []
+        for c, lp, src in plan:
+            pg = self._take_page(c)
+            assert pg is not None
+            c.table[slot, lp] = pg
+            c.refcount[pg] = 1
+            if src is not None:
+                c.refcount[src] -= 1  # still >= 1: someone else maps it
+                copies.append((c.width, src, pg))
+        for c in self.classes.values():  # sole-owner writes: just unpublish
+            lp = (length % c.width) // self.page_size
+            entry = int(c.table[slot, lp])
+            if c.refcount[entry] == 1 and entry in c.published:
+                self._unpublish(c, entry)
         if plan:
             self._dev = None
-        return True
+        return True, copies
+
+    def ensure_write(self, slot: int, length: int) -> bool:
+        """Pool-level form of :meth:`make_writable` (discards the copy
+        list — fine for allocator tests; the engine must execute the
+        copies, so it calls ``make_writable`` directly)."""
+        return self.make_writable(slot, length)[0]
+
+    def make_range_writable(self, slot: int, start: int,
+                            end: int) -> List[PageCopy]:
+        """Make every position in ``[start, end)`` writable (assign-time
+        form, used before the fused suffix copy writes ``[off, total]``):
+        CoW shared pages and unpublish sole-owner published ones. Pages
+        must already be mapped (``map_shared`` + ``alloc_prefix`` ran);
+        raises ``RuntimeError`` if a CoW target cannot be obtained, like
+        :meth:`alloc_prefix` (same page-budget guarantee)."""
+        copies: List[PageCopy] = []
+        for c in self.classes.values():
+            lps = sorted({(p % c.width) // self.page_size
+                          for p in range(start, end)})
+            for lp in lps:
+                entry = int(c.table[slot, lp])
+                if entry == c.FREE:
+                    raise RuntimeError("write range not allocated")
+                if c.refcount[entry] > 1:
+                    pg = self._take_page(c)
+                    if pg is None:
+                        raise RuntimeError(
+                            f"page pool exhausted: class width={c.width} "
+                            "has no page for copy-on-write")
+                    c.table[slot, lp] = pg
+                    c.refcount[pg] = 1
+                    c.refcount[entry] -= 1
+                    copies.append((c.width, entry, pg))
+                    self._dev = None
+                elif entry in c.published:
+                    self._unpublish(c, entry)
+        return copies
 
     def release(self, slot: int) -> None:
+        """Drop every reference ``slot`` holds. Pages reaching refcount 0
+        go back to the free list — unless they are published prefix pages,
+        which are *retained* (LRU) for future hits until evicted."""
         for c in self.classes.values():
             held = c.table[slot]
             for lp in np.flatnonzero(held != c.FREE):
-                c.free.append(int(held[lp]))
+                pg = int(held[lp])
+                c.refcount[pg] -= 1
+                if c.refcount[pg] == 0:
+                    if pg in c.published:
+                        c.retained[pg] = None  # most-recently-used end
+                        c.retained.move_to_end(pg)
+                    else:
+                        c.free.append(pg)
             held[:] = c.FREE
         self._dev = None
+
+    def drop_prefix_cache(self) -> None:
+        """Unpublish everything and free all retained pages (tests)."""
+        for c in self.classes.values():
+            for pg in list(c.retained):
+                self._unpublish(c, pg)
+                c.free.append(pg)
+            c.retained.clear()
+            for pg in list(c.published):
+                self._unpublish(c, pg)
 
     def shuffle_free(self, rng: np.random.Generator) -> None:
         """Scramble physical page order (tests: fragmentation-independence
@@ -220,11 +481,24 @@ class PagePool:
     # -- invariants (tests) --------------------------------------------
 
     def check_invariants(self) -> None:
-        """No page is double-mapped, and free + mapped == capacity."""
+        """Refcounts equal block-table reference counts, free/retained/
+        mapped partition the pool, and the prefix index is a bijection."""
         for c in self.classes.values():
-            mapped = c.table[c.table != c.FREE]
             assert c.table[self.num_slots].tolist() == [c.FREE] * c.lane_pages
-            assert len(set(mapped.tolist())) == mapped.size, "page aliased"
+            mapped = c.table[:self.num_slots][
+                c.table[:self.num_slots] != c.FREE]
+            refs = Counter(mapped.tolist())
+            for pg in range(c.num_pages):
+                assert c.refcount[pg] == refs.get(pg, 0), \
+                    f"refcount drift on page {pg}"
             assert len(set(c.free)) == len(c.free), "free list duplicated"
-            assert mapped.size + len(c.free) == c.num_pages, "pages leaked"
-            assert not (set(c.free) & set(mapped.tolist()))
+            assert not (set(c.free) & set(refs)), "free page still mapped"
+            assert not (set(c.free) & set(c.retained)), "retained and free"
+            assert not (set(c.retained) & set(refs)), "retained page mapped"
+            for pg in c.retained:
+                assert pg in c.published, "retained page not published"
+            assert len(c.free) + len(c.retained) + len(refs) == c.num_pages, \
+                "pages leaked"
+            assert len(c.index) == len(c.published), "prefix index drift"
+            for key, pg in c.index.items():
+                assert c.published.get(pg) == key, "prefix index not bijective"

@@ -66,6 +66,11 @@ class Admission:
       stacks, where segment masking makes packing exact).
     * ``chunks`` — a solo long prompt whose ``chunks`` concatenate back to
       the full prompt and whose prefill width is ``len(chunks) * max_len``.
+    * ``shared_prefix > 0`` — a solo request whose first ``shared_prefix``
+      prompt tokens are resident in the paged prefix cache
+      (``serve/pages.py``): the engine maps the shared pages and prefills
+      only the suffix. Solo because a packed row cannot give each segment
+      its own prefix-KV memory.
     * neither (``row_width`` set) — one request per row, emitted by a
       no-pack scheduler (recurrent stacks: the prefill cache stores only
       each row's end-of-sequence state, so requests cannot share a row; the
@@ -76,6 +81,7 @@ class Admission:
     packed: Optional[PackedBatch] = None
     chunks: Optional[List[np.ndarray]] = None
     row_width: Optional[int] = None  # row-per-request layout width
+    shared_prefix: int = 0  # prefix tokens expected to come from the cache
 
     @property
     def utilization(self) -> float:
@@ -136,20 +142,29 @@ class Scheduler:
         original admission already proved the total fits a cache lane."""
         self.queue.insert(0, req)
 
-    def next_admissions(self, free_slots: int,
-                        reserve=None) -> List[Admission]:
+    def next_admissions(self, free_slots: int, reserve=None,
+                        probe=None) -> List[Admission]:
         """Admit up to ``free_slots`` queued requests as admission groups.
 
         With a paged lane pool the engine also passes ``reserve`` — a
-        stateful callable (``PagePool.reserver``) that claims the pages a
-        lane admitted at ``prompt_len`` will use, per width class, and
+        stateful callable (``Engine._page_reserve`` wrapping the pool's
+        per-width-class budget) that claims the pages a lane admitted for
+        ``req`` will use — *net of expected prefix-cache hits* — and
         returns False once the pool would overcommit: admission then stops
         at the queue head that no longer fits — FIFO head-blocking, not
         skip-ahead, so the admission sequence (and therefore every token)
         is deterministic for a given workload.
+
+        ``probe`` (prefix sharing): callable returning the number of a
+        request's leading prompt tokens resident in the prefix cache.
+        Requests with a hit are emitted as **solo** admissions
+        (``shared_prefix`` set) — a packed row cannot give each segment
+        its own prefix-KV memory — and the engine re-probes at prefill
+        time, so a stale estimate only costs packing efficiency, never
+        correctness.
         """
         def fits(req: Request) -> bool:
-            return reserve is None or reserve(len(req.prompt))
+            return reserve is None or reserve(req)
 
         if not self.pack:
             take = min(free_slots, self.max_rows, len(self.queue))
@@ -166,7 +181,12 @@ class Scheduler:
         taken = 0
         while self.queue and taken < free_slots and fits(self.queue[0]):
             req = self.queue[0]
-            if len(req.prompt) > self.policy.max_len:
+            shared = probe(req) if probe is not None else 0
+            if shared > 0:
+                self.queue.pop(0)
+                groups.append(Admission(requests=[req],
+                                        shared_prefix=shared))
+            elif len(req.prompt) > self.policy.max_len:
                 self.queue.pop(0)
                 groups.append(Admission(
                     requests=[req],

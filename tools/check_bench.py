@@ -1,0 +1,112 @@
+"""Benchmark gate enforcement over the ``BENCH_<table>.json`` sidecars.
+
+CI (and anyone locally, after ``python -m benchmarks.run decode
+decode_attn``) runs this instead of ad-hoc inline snippets so every
+tracked serving metric is gated in ONE place and a regression fails with
+the offending key named:
+
+* ``BENCH_decode.json``
+  * ``speedup_vs_lockstep`` >= 1.5 — the continuous-batching win over the
+    seed lock-step decode (measured on the contiguous layout; ROADMAP's
+    pinned metric).
+  * ``kv_memory_ratio`` present in (0, 1] — the paged pool's footprint
+    follows occupancy (contiguous would be 1.0 by definition).
+  * ``prefix.prefix_hit_ratio`` > 0 — on the shared-prefix workload the
+    prefix cache actually serves pages.
+  * ``prefix.kv_memory_ratio`` < ``prefix.kv_memory_ratio_noshare`` —
+    sharing strictly shrinks the footprint of the same workload.
+* ``BENCH_decode_attn.json``
+  * ``kv_block_ratio`` < 0.7 — the TDA kernel's predicated grid visits
+    blocks in proportion to occupancy, not capacity.
+
+Exit code 1 on any violation (or missing file/key), 0 when green.
+
+  python tools/check_bench.py [--dir DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+# (file, dotted key path, predicate, human-readable requirement)
+GATES = [
+    ("BENCH_decode.json", "speedup_vs_lockstep",
+     lambda v, rec: v >= 1.5, ">= 1.5 (continuous vs lock-step tokens/s)"),
+    ("BENCH_decode.json", "slot_utilization",
+     lambda v, rec: v >= 0.7, ">= 0.7 (per-step slot occupancy on the "
+     "tracked mixed-length workload, ~0.8 historically)"),
+    ("BENCH_decode.json", "kv_memory_ratio",
+     lambda v, rec: 0.0 < v <= 1.0, "in (0, 1] (paged footprint tracks "
+     "occupancy)"),
+    ("BENCH_decode.json", "prefix.prefix_hit_ratio",
+     lambda v, rec: v > 0.0, "> 0 (shared-prefix workload must hit the "
+     "prefix cache)"),
+    ("BENCH_decode.json", "prefix.kv_memory_ratio",
+     lambda v, rec: v < rec["prefix"]["kv_memory_ratio_noshare"],
+     "< prefix.kv_memory_ratio_noshare (sharing must strictly shrink the "
+     "footprint)"),
+    ("BENCH_decode.json", "prefix.pages_shared",
+     lambda v, rec: v > 0, "> 0 (physical pages actually shared)"),
+    ("BENCH_decode_attn.json", "kv_block_ratio",
+     lambda v, rec: v < 0.7, "< 0.7 (predicated TDA grid vs dense sweep)"),
+]
+
+
+def lookup(rec: dict, dotted: str):
+    cur = rec
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            raise KeyError(dotted)
+        cur = cur[part]
+    return cur
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=".",
+                    help="directory holding the BENCH_*.json sidecars")
+    args = ap.parse_args()
+    root = pathlib.Path(args.dir)
+    failures = []
+    records: dict = {}
+    for fname, key, pred, want in GATES:
+        path = root / fname
+        if fname not in records:
+            if not path.exists():
+                failures.append(f"{fname}: missing (run `python -m "
+                                "benchmarks.run decode decode_attn` first)")
+                records[fname] = None
+                continue
+            records[fname] = json.loads(path.read_text())
+        rec = records[fname]
+        if rec is None:
+            continue
+        try:
+            val = lookup(rec, key)
+        except KeyError:
+            failures.append(f"{fname}: key `{key}` missing (required {want})")
+            continue
+        try:
+            ok = pred(val, rec)
+        except (KeyError, TypeError) as e:
+            # a predicate may cross-reference another sidecar key
+            failures.append(f"{fname}: `{key}` gate unevaluable "
+                            f"({type(e).__name__}: {e}; required {want})")
+            continue
+        if not ok:
+            failures.append(f"{fname}: `{key}` = {val!r} violates {want}")
+        else:
+            print(f"OK  {fname}: {key} = {val!r} ({want})")
+    if failures:
+        print("\nBENCH GATES FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"bench gates OK ({len(GATES)} checks)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,6 +33,8 @@ REQUIRED_ANCHORS = [
     ("README.md", "python -m pytest -x -q"),
     ("README.md", "serve/pages.py"),          # paged lane-pool column/row
     ("README.md", "kv_memory_ratio"),
+    ("README.md", "prefix_hit_ratio"),        # prefix-sharing gate + row
+    ("README.md", "| Shared |"),              # config-coverage shared column
     ("serving.md", "src/repro/serve/pages.py"),
     ("serving.md", "block table"),
     ("serving.md", "[lo, hi)"),
@@ -40,6 +42,13 @@ REQUIRED_ANCHORS = [
     ("serving.md", "preempt"),
     ("serving.md", "src/repro/serve/sampling.py"),
     ("serving.md", "speedup_vs_lockstep"),
+    # prefix cache contract: hash granularity, CoW, eviction, gates
+    ("serving.md", "chained"),
+    ("serving.md", "copy-on-write"),
+    ("serving.md", "prefix_hit_ratio"),
+    ("serving.md", "pages_shared"),
+    ("serving.md", "LRU"),
+    ("serving.md", "tools/check_bench.py"),
 ]
 
 PATH_RE = re.compile(
