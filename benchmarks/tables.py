@@ -379,6 +379,47 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
     rec_s, rec = engine_workload("mamba2-370m")
     win_s, win = engine_workload("starcoder2-15b")
 
+    # ---- compressed weights on the decode hot path: the same factorized
+    # smoke model served twice over the same workload — once with dense
+    # factorized leaves, once through Model.compress_params (nibble-packed
+    # W_S codes + delta/6b W_D streams). Both engines get the audited
+    # weight_stream_bits, so bytes_per_token compares the actual streamed
+    # formats; equal budgets make the comparison token-equal by
+    # construction (gated in tools/check_bench.py).
+    from repro.core.factorized import project_wd_leaves
+    fcfg_c = FactorizationConfig(enabled=True, min_dim=32, rank=32, nnz=8)
+    cfg_f = get_config("qwen2.5-32b", "smoke", factorization=fcfg_c)
+    model_f = Model(cfg_f)
+    params_f = project_wd_leaves(model_f.init(jax.random.key(0)), fcfg_c)
+    model_c, params_c, wstats = model_f.compress_params(params_f)
+    spec_c = spec[:12]
+    useful_c = sum(b for _, b in spec_c)
+
+    def workload_c():
+        r6 = np.random.default_rng(6)
+        return [Request(rid=200 + i, prompt=r6.integers(
+                    0, cfg_f.vocab_size, size=L).astype(np.int32),
+                    max_new_tokens=b)
+                for i, (L, b) in enumerate(spec_c)]
+
+    def run_compressed(m_, p_, wsb):
+        e = Engine(m_, p_, max_len=max_len, max_new_tokens=max_new,
+                   num_slots=num_slots, decode_block_k=32, paged=True,
+                   page_size=8, prefix_share=False, weight_stream_bits=wsb)
+        for r in workload_c():
+            e.submit(r)
+        e.run()  # compile
+        t0 = time.perf_counter()
+        for r in workload_c():
+            e.submit(r)
+        e.run()
+        return time.perf_counter() - t0, e.decode_stats
+
+    fd_s, fd = run_compressed(model_f, params_f,
+                              wstats["weight_stream_bits_dense"])
+    cm_s, cm = run_compressed(model_c, params_c,
+                              wstats["weight_stream_bits"])
+
     ARTIFACTS["decode"] = {
         "tokens_per_s": useful / ct_s,
         "tokens_per_s_lockstep": useful / ls_s,
@@ -405,6 +446,21 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
         },
         "recurrent": rec,
         "short_window": win,
+        # tracked compressed-serving gates (tools/check_bench.py): the
+        # compressed engine must move strictly fewer estimated bytes per
+        # token than the dense-factorized engine at equal decoded tokens
+        "compressed": {
+            "bytes_per_token": cm["bytes_per_token"],
+            "bytes_per_token_dense": fd["bytes_per_token"],
+            "weight_bytes_per_token": cm["weight_bytes_per_token"],
+            "weight_bytes_per_token_dense": fd["weight_bytes_per_token"],
+            "kv_bytes_per_token": cm["kv_bytes_per_token"],
+            "decoded_tokens": cm["decoded_tokens"],
+            "decoded_tokens_dense": fd["decoded_tokens"],
+            "tokens_per_s": useful_c / cm_s,
+            "tokens_per_s_dense": useful_c / fd_s,
+            "weight_compression_ratio": wstats["weight_compression_ratio"],
+        },
     }
     return [
         ("decode/lockstep", ls_s * 1e6,
@@ -433,6 +489,13 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
          f"arch={win['arch']} tok/s={win['tokens_per_s']:.0f} "
          f"slot_util={win['slot_utilization']:.2f} "
          f"kv_ratio={win['kv_block_ratio']:.2f} (ring lanes)"),
+        ("decode/compressed", cm_s * 1e6,
+         f"bytes/tok={cm['bytes_per_token']:.0f} vs dense "
+         f"{fd['bytes_per_token']:.0f} "
+         f"({fd['bytes_per_token'] / cm['bytes_per_token']:.2f}x less "
+         f"HBM est.) weight_ratio="
+         f"{wstats['weight_compression_ratio']:.2f}x "
+         f"tokens={cm['decoded_tokens']}=={fd['decoded_tokens']}"),
     ]
 
 

@@ -139,8 +139,11 @@ def quantize_uniform(v: np.ndarray, bits: int = 6) -> UniformQuant:
     return UniformQuant(q=q, scale=scale, offset=m, bits=bits)
 
 
-def dequantize_uniform(q: jnp.ndarray, scale, offset, bits: int = 6) -> jnp.ndarray:
-    levels = (1 << bits) - 1
+def dequantize_uniform(q: jnp.ndarray, scale, offset, bits=6) -> jnp.ndarray:
+    """Runtime dequantizer. ``bits`` may be a traced scalar (the serving path
+    streams it alongside the codes), so the level count is computed with
+    ``exp2`` — exact for any realistic width — instead of a Python shift."""
+    levels = jnp.exp2(jnp.asarray(bits, jnp.float32)) - 1.0
     return q.astype(jnp.float32) / levels * scale + offset
 
 
@@ -323,10 +326,18 @@ def ws_compressed_bits(cws: CompressedWS) -> int:
 def wd_compressed_bits(cwd: CompressedWD, use_achieved_delta_bits: bool = False) -> int:
     """Bits to stream one layer's W_D.
 
-    Per column: one absolute first index (ceil(log2 r) bits) + (nnz-1) deltas at
-    5b (paper) or at the achieved width + nnz values at 6b. Scale/offset: 2x16b.
+    Per column: one absolute first index (ceil(log2 r) bits) + (nnz-1) deltas
+    + nnz values at ``value_bits``. Scale/offset: 2x16b. Two delta-width
+    accounting modes:
+
+    * ``use_achieved_delta_bits=False`` (default) prices deltas at the paper's
+      nominal ``target_delta_bits`` (5b) — the format the chip assumes after
+      the reorder pass squeezed deltas into range.
+    * ``use_achieved_delta_bits=True`` prices deltas at the width this stream
+      actually needs — the audited number, and the honest one when no reorder
+      ran (e.g. layers sharing one W_S cannot each pick their own column
+      order). The serving bytes-per-token metric uses this mode.
     """
     db = cwd.achieved_delta_bits if use_achieved_delta_bits else cwd.target_delta_bits
-    db = max(db, cwd.achieved_delta_bits) if use_achieved_delta_bits else db
     per_col = cwd.first_index_bits + (cwd.nnz - 1) * db + cwd.nnz * cwd.value_bits
     return per_col * cwd.d_out + 2 * 16

@@ -44,6 +44,11 @@ __all__ = [
     "linear_param_bits",
     "compress_linear",
     "apply_compressed_linear",
+    "compress_model_params",
+    "decompress_ws_entry",
+    "decompress_wd_leaf",
+    "params_stream_bits",
+    "project_wd_leaves",
 ]
 
 
@@ -151,8 +156,20 @@ def apply_linear(
     family: str,
     fcfg: FactorizationConfig,
     sparse_train: bool = False,
+    compute_dtype=None,
 ) -> jnp.ndarray:
-    """y = x @ W (+ b), where W may be factorized through the family dictionary."""
+    """y = x @ W (+ b), where W may be factorized through the family dictionary.
+
+    Dispatches on the keys present in ``p``: dense (``w``), factorized
+    (``wd``), or the compressed streaming format (``wd_vq``, produced by
+    :func:`compress_model_params`) — so dense, factorized, and compressed
+    checkpoints all share the same model code.
+    """
+    if "wd_vq" in p:
+        return apply_compressed_linear(
+            p, x, dicts, family,
+            compute_dtype=compute_dtype if compute_dtype is not None
+            else x.dtype)
     if "w" in p:
         y = x @ p["w"]
     else:
@@ -206,14 +223,16 @@ def compress_linear(
     family: str,
     fcfg: FactorizationConfig,
     reorder: bool = True,
+    value_bits: int = 6,
 ) -> Dict[str, np.ndarray]:
     """Offline: turn one factorized layer into the T-REX streaming format.
 
     Returns a jnp-friendly dict:
       ``wd_first`` int32 (d_out,)        absolute first row index per column
       ``wd_deltas`` uint8|int16 (nnz-1, d_out)  delta-encoded remaining indices
-      ``wd_vq`` uint8 (nnz, d_out)       6b uniform codes
+      ``wd_vq`` uint8 (nnz, d_out)       uniform value codes
       ``wd_scale``, ``wd_offset`` f32    per-layer dequant constants
+      ``wd_bits`` int32                  value quantizer width (``value_bits``)
     Dense layers pass through unchanged. The shared-dictionary compression
     (4b nibble-packed codes + LUT) is done once per family by the caller.
     """
@@ -226,7 +245,7 @@ def compress_linear(
     if reorder:
         dense_idx = np.sort(np.argsort(-np.abs(wd), axis=0)[:nnz], axis=0)
         order = comp.reorder_for_delta(dense_idx, r)
-    cwd = comp.compress_wd(wd, nnz, order=order)
+    cwd = comp.compress_wd(wd, nnz, value_bits=value_bits, order=order)
     out = {
         "wd_first": comp.delta_decode(cwd.deltas)[0].astype(np.int32),
         "wd_deltas": cwd.deltas[1:].astype(
@@ -235,6 +254,7 @@ def compress_linear(
         "wd_vq": cwd.values_q,
         "wd_scale": np.float32(cwd.scale),
         "wd_offset": np.float32(cwd.offset),
+        "wd_bits": np.int32(value_bits),
     }
     if "b" in p:
         out["b"] = np.asarray(p["b"])
@@ -244,8 +264,15 @@ def compress_linear(
 
 
 def pack_nibbles(codes: np.ndarray) -> np.ndarray:
-    """Pack 4b codes two-per-byte along the leading axis (even length required)."""
-    assert codes.shape[0] % 2 == 0
+    """Pack 4b codes two-per-byte along the leading axis.
+
+    An odd leading axis is padded with one zero-code row; consumers crop to
+    the true length after :func:`unpack_nibbles` (the kernel path instead
+    pads ``x`` with a zero column, which nullifies the pad row's weights)."""
+    codes = np.asarray(codes)
+    if codes.shape[0] % 2:
+        codes = np.concatenate(
+            [codes, np.zeros((1,) + codes.shape[1:], codes.dtype)], axis=0)
     hi = codes[0::2].astype(np.uint8)
     lo = codes[1::2].astype(np.uint8)
     return (hi << 4) | lo
@@ -257,41 +284,206 @@ def unpack_nibbles(packed: jnp.ndarray) -> jnp.ndarray:
     return jnp.stack([hi, lo], axis=1).reshape((-1,) + packed.shape[1:])
 
 
+def decompress_ws_entry(entry, d_in: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Dense (d_in, r) W_S from a ``cdicts`` entry — either a raw array or a
+    ``{"codes_packed", "lut"}`` compressed dict (cropping the odd-``d_in``
+    nibble pad)."""
+    if isinstance(entry, dict):
+        ws = comp.dequantize_nonuniform(
+            unpack_nibbles(entry["codes_packed"]), entry["lut"])
+        return ws[:d_in].astype(dtype)
+    return entry.astype(dtype)
+
+
+def decompress_wd_leaf(p: Dict[str, jnp.ndarray], r: int,
+                       dtype=jnp.float32) -> jnp.ndarray:
+    """Dense (r, d_out) W_D from one compressed leaf group (``wd_first``,
+    ``wd_deltas``, ``wd_vq``, ``wd_scale``, ``wd_offset``, ``wd_bits``).
+
+    Matches :func:`repro.core.compression.decompress_wd_dense` bit-for-bit;
+    this variant consumes the stacked in-tree layout (and a possibly traced
+    ``wd_bits``) instead of a host-side :class:`CompressedWD`."""
+    first = p["wd_first"][None].astype(jnp.int32)
+    idx = jnp.concatenate(
+        [first, first + jnp.cumsum(p["wd_deltas"].astype(jnp.int32), axis=0)],
+        axis=0)  # (nnz, d_out)
+    vals = comp.dequantize_uniform(p["wd_vq"], p["wd_scale"], p["wd_offset"],
+                                   p.get("wd_bits", 6))
+    d_out = idx.shape[1]
+    dense = jnp.zeros((r, d_out), jnp.float32)
+    cols = jnp.broadcast_to(jnp.arange(d_out), idx.shape)
+    dense = dense.at[idx.reshape(-1), cols.reshape(-1)].add(vals.reshape(-1))
+    return dense.astype(dtype)
+
+
 def apply_compressed_linear(
     p: Dict[str, jnp.ndarray],
     x: jnp.ndarray,
     cdicts: Dict[str, Dict[str, jnp.ndarray]],
     family: str,
     compute_dtype=jnp.bfloat16,
+    use_kernel: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """Runtime decompress-and-matmul (pure-jnp path; Pallas kernels in kernels/).
+    """Runtime decompress-and-matmul over the T-REX streams.
 
-    HBM traffic: nibble-packed W_S codes + delta/6b W_D streams only; the dense
-    matrices exist only transiently (XLA fuses the gathers into the consumers).
+    HBM traffic: nibble-packed W_S codes + delta/``wd_bits`` W_D streams only;
+    the dense matrices exist only transiently. ``use_kernel=None`` follows the
+    backend dispatch in :mod:`repro.kernels.common` — the fused dmm/smm Pallas
+    kernels on TPU, the pure-jnp reference elsewhere (XLA fuses the gathers
+    into the consumers); an explicit bool always wins (tests run the kernels
+    in interpret mode on CPU with ``use_kernel=True``).
     """
     if "w" in p:
         y = x @ p["w"].astype(compute_dtype)
     else:
         cd = cdicts[family]
-        ws = comp.dequantize_nonuniform(
-            unpack_nibbles(cd["codes_packed"]), cd["lut"]
-        ).astype(compute_dtype)
-        y1 = x @ ws
-        idx = jnp.concatenate(
-            [p["wd_first"][None].astype(jnp.int32),
-             p["wd_first"][None].astype(jnp.int32)
-             + jnp.cumsum(p["wd_deltas"].astype(jnp.int32), axis=0)],
-            axis=0,
-        )  # (nnz, d_out)
-        vals = comp.dequantize_uniform(p["wd_vq"], p["wd_scale"], p["wd_offset"])
-        r = ws.shape[1]
-        d_out = idx.shape[1]
-        dense = jnp.zeros((r, d_out), compute_dtype)
-        cols = jnp.broadcast_to(jnp.arange(d_out), idx.shape)
-        dense = dense.at[idx.reshape(-1), cols.reshape(-1)].add(
-            vals.reshape(-1).astype(compute_dtype)
-        )
-        y = y1 @ dense
+        d_in = x.shape[-1]
+        if use_kernel is None:
+            from repro.kernels.common import pallas_interpret_default
+            use_kernel = isinstance(cd, dict) and not pallas_interpret_default()
+        if use_kernel and isinstance(cd, dict):
+            from repro.kernels.dmm.ops import lut_matmul
+            from repro.kernels.smm.ops import compressed_matmul
+            lead = x.shape[:-1]
+            x2 = x.reshape((-1, d_in))
+            y1 = lut_matmul(x2, cd["codes_packed"], cd["lut"])  # (M, r) f32
+            z = compressed_matmul(
+                y1, p["wd_first"].astype(jnp.int32), p["wd_deltas"],
+                p["wd_vq"], p["wd_scale"], p["wd_offset"],
+                value_bits=p.get("wd_bits", 6))
+            y = z.reshape(lead + (z.shape[-1],)).astype(compute_dtype)
+        else:
+            ws = decompress_ws_entry(cd, d_in, compute_dtype)
+            y1 = x @ ws
+            dense = decompress_wd_leaf(p, ws.shape[1], compute_dtype)
+            y = y1 @ dense
     if "b" in p:
         y = y + p["b"].astype(compute_dtype)
     return y
+
+
+# --------------------------------------------------------------------------
+# Whole-model compression (serve path) + stream-bits accounting
+# --------------------------------------------------------------------------
+
+
+def _leaf_bits(a) -> int:
+    return int(np.prod(a.shape, dtype=np.int64)) * np.dtype(a.dtype).itemsize * 8
+
+
+def params_stream_bits(params) -> int:
+    """Estimated bits streamed per decode step if every weight leaf is read
+    once — the generic (byte-aligned) fallback when no audited accounting is
+    available. :func:`compress_model_params` returns the audited number for
+    compressed trees (sub-byte streams are NOT byte-aligned on the chip)."""
+    return sum(_leaf_bits(leaf) for leaf in jax.tree.leaves(params))
+
+
+def project_wd_leaves(params, fcfg: FactorizationConfig):
+    """End-of-training projection: every W_D leaf snapped to its top-nnz
+    column support, so the offline compression is exact on the indices
+    (idempotent with :func:`repro.core.compression.compress_wd`)."""
+    def proj(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        if not names or names[-1] != "wd":
+            return leaf
+        r, d_out = leaf.shape[-2], leaf.shape[-1]
+        nnz = fcfg.nnz_for(r)
+        flat = leaf.reshape((-1, r, d_out))
+        out = jax.vmap(lambda w: sparsity.project_topk_columns(w, nnz))(flat)
+        return out.reshape(leaf.shape)
+    return jax.tree_util.tree_map_with_path(proj, params)
+
+
+def compress_model_params(params, fcfg: FactorizationConfig,
+                          value_bits: int = 6):
+    """Offline host-side walk: factorized param tree -> T-REX streaming tree.
+
+    * ``params["dicts"]``: each family dictionary becomes ``{"codes_packed",
+      "lut"}`` (4b non-uniform codes, nibble-packed along d_in).
+    * Every ``{"wd": (..., r, d_out)}`` group (plain, layer-stacked
+      ``(L, r, d_out)``, or MoE ``(E, r, d_out)`` — any leading dims) becomes
+      the ``wd_first/wd_deltas/wd_vq/wd_scale/wd_offset/wd_bits`` streams
+      with the same leading dims, so scan/unroll slicing and per-expert vmaps
+      keep working unchanged.
+    * Everything else (embeddings, norms, biases, dense ``w``) passes through.
+
+    No reorder pass runs: the per-layer permutation from
+    :func:`reorder_for_delta` would demand a different W_S column order per
+    layer, which a family-shared dictionary cannot satisfy — so the stream
+    accounting prices deltas at their *achieved* width
+    (``wd_compressed_bits(..., use_achieved_delta_bits=True)``).
+
+    Returns ``(cparams, stats)`` where ``stats`` has ``weight_stream_bits``
+    (audited bits to stream every weight once, compressed),
+    ``weight_stream_bits_dense`` (same tree uncompressed), and their ratio.
+    """
+    if not isinstance(params, dict) or "dicts" not in params:
+        raise ValueError("compress_model_params needs a factorized param tree "
+                         "(params['dicts'] missing — init the model with "
+                         "factorization.enabled=True)")
+    bits_c = 0  # compressed stream bits
+    bits_d = 0  # dense stream bits for the same leaves
+
+    cdicts = {}
+    for fam, ws in params["dicts"].items():
+        cws = comp.compress_ws(np.asarray(ws, np.float32))
+        cdicts[fam] = {"codes_packed": jnp.asarray(pack_nibbles(cws.codes)),
+                       "lut": jnp.asarray(cws.lut)}
+        bits_c += comp.ws_compressed_bits(cws)
+        bits_d += _leaf_bits(ws)
+
+    def compress_group(d: Dict) -> Dict:
+        nonlocal bits_c, bits_d
+        wd = np.asarray(d["wd"], np.float32)
+        lead, (r, d_out) = wd.shape[:-2], wd.shape[-2:]
+        nnz = fcfg.nnz_for(r)
+        parts = [comp.compress_wd(w2, nnz, value_bits=value_bits)
+                 for w2 in wd.reshape((-1, r, d_out))]
+        bits_c += sum(comp.wd_compressed_bits(c, use_achieved_delta_bits=True)
+                      for c in parts)
+        bits_d += _leaf_bits(d["wd"])
+        # One dtype across the stack: the widest any slice needs.
+        ddt = np.uint8 if max(c.achieved_delta_bits for c in parts) <= 8 \
+            else np.int16
+
+        def stack(f):
+            arrs = [np.asarray(f(c)) for c in parts]
+            return np.stack(arrs).reshape(lead + arrs[0].shape)
+
+        out = {
+            "wd_first": stack(
+                lambda c: comp.delta_decode(c.deltas)[0].astype(np.int32)),
+            "wd_deltas": stack(lambda c: c.deltas[1:].astype(ddt)),
+            "wd_vq": stack(lambda c: c.values_q),
+            "wd_scale": stack(lambda c: np.float32(c.scale)),
+            "wd_offset": stack(lambda c: np.float32(c.offset)),
+            "wd_bits": stack(lambda c: np.int32(c.value_bits)),
+        }
+        out = {k: jnp.asarray(v) for k, v in out.items()}
+        for k, v in d.items():  # passthrough (biases)
+            if k != "wd":
+                out[k] = v
+                bits_c += _leaf_bits(v)
+                bits_d += _leaf_bits(v)
+        return out
+
+    def walk(node):
+        nonlocal bits_c, bits_d
+        if isinstance(node, dict):
+            if "wd" in node:
+                return compress_group(node)
+            return {k: walk(v) for k, v in node.items()}
+        bits_c += _leaf_bits(node)
+        bits_d += _leaf_bits(node)
+        return node
+
+    cparams = {k: (cdicts if k == "dicts" else walk(v))
+               for k, v in params.items()}
+    stats = {
+        "weight_stream_bits": int(bits_c),
+        "weight_stream_bits_dense": int(bits_d),
+        "weight_compression_ratio": bits_d / max(bits_c, 1),
+        "value_bits": value_bits,
+    }
+    return cparams, stats

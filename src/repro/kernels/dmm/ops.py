@@ -32,6 +32,13 @@ def lut_matmul(x: jnp.ndarray, codes_packed: jnp.ndarray, lut: jnp.ndarray,
     N = codes_packed.shape[1]
     if not use_kernel:
         return dmm_reference(x, codes_packed, lut)
+    if codes_packed.shape[0] * 2 != K:
+        # Odd K: pack_nibbles padded the codes with one zero-code row, so
+        # give x a matching zero column — zero activations nullify whatever
+        # weight lut[0] decodes to, keeping the product exact.
+        assert codes_packed.shape[0] * 2 == K + 1, (codes_packed.shape, K)
+        x = jnp.pad(x, ((0, 0), (0, 1)))
+        K += 1
     bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
     xp = _pad_to(_pad_to(x, bm_, 0), bk_, 1)
     cp = _pad_to(_pad_to(codes_packed, bk_ // 2, 0), bn_, 1)

@@ -2,7 +2,8 @@
 
 Mirrors the T-REX DMM core: a LUT-based non-uniform dequantizer feeding the
 MAC array. ``codes_packed`` stores two 4b codes per byte along the K axis
-(even K required), exactly the streamed format the chip reads.
+(odd K carries one zero-code pad row), exactly the streamed format the chip
+reads.
 """
 from __future__ import annotations
 
@@ -18,7 +19,9 @@ def unpack_nibbles(packed: jnp.ndarray) -> jnp.ndarray:
 
 def dmm_reference(x: jnp.ndarray, codes_packed: jnp.ndarray,
                   lut: jnp.ndarray) -> jnp.ndarray:
-    """x (M, K) float; codes_packed (K//2, N) uint8; lut (16,) f32 -> (M, N) f32."""
+    """x (M, K) float; codes_packed (ceil(K/2), N) uint8; lut (16,) f32 ->
+    (M, N) f32. Odd K: the packed stream carries one zero-code pad row
+    (``pack_nibbles``), cropped here to x's true K."""
     codes = unpack_nibbles(codes_packed)
-    w = jnp.take(lut, codes, axis=0)  # (K, N) f32
+    w = jnp.take(lut, codes, axis=0)[:x.shape[1]]  # (K, N) f32
     return jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)

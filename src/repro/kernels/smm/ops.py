@@ -7,7 +7,7 @@ from typing import Optional
 import jax.numpy as jnp
 
 from repro.kernels.common import resolve_interpret
-from repro.kernels.smm.ref import smm_reference
+from repro.kernels.smm.ref import VALUE_BITS, smm_reference
 from repro.kernels.smm.smm import smm_matmul
 
 
@@ -21,14 +21,18 @@ def _pad_to(x, m, axis):
 
 
 def compressed_matmul(y: jnp.ndarray, first: jnp.ndarray, deltas: jnp.ndarray,
-                      vq: jnp.ndarray, scale, offset, *, bm: int = 256,
+                      vq: jnp.ndarray, scale, offset, *,
+                      value_bits=VALUE_BITS, bm: int = 256,
                       bn: int = 256, use_kernel: bool = True,
                       interpret: Optional[bool] = None) -> jnp.ndarray:
-    """z = y @ densify(first, deltas, vq, scale, offset)."""
+    """z = y @ densify(first, deltas, vq, scale, offset).
+
+    ``value_bits`` is the W_D value quantizer width — an int or a traced
+    scalar (the serving path streams it with the layer's codes)."""
     scale = jnp.asarray(scale, jnp.float32)
     offset = jnp.asarray(offset, jnp.float32)
     if not use_kernel:
-        return smm_reference(y, first, deltas, vq, scale, offset)
+        return smm_reference(y, first, deltas, vq, scale, offset, value_bits)
     M, r = y.shape
     N = vq.shape[1]
     bm_, bn_ = min(bm, M), min(bn, N)
@@ -39,6 +43,7 @@ def compressed_matmul(y: jnp.ndarray, first: jnp.ndarray, deltas: jnp.ndarray,
     fp = _pad_to(first, bn_, 0)
     dp = _pad_to(deltas, bn_, 1)
     vp = _pad_to(vq, bn_, 1)
-    out = smm_matmul(yp, fp, dp, vp, scale, offset, bm=bm_, bn=bn_,
+    levels = jnp.exp2(jnp.asarray(value_bits, jnp.float32)) - 1.0
+    out = smm_matmul(yp, fp, dp, vp, scale, offset, levels, bm=bm_, bn=bn_,
                      interpret=resolve_interpret(interpret))
     return out[:M, :N]

@@ -21,23 +21,28 @@ def decode_indices(first: jnp.ndarray, deltas: jnp.ndarray) -> jnp.ndarray:
          + jnp.cumsum(deltas.astype(jnp.int32), axis=0)], axis=0)
 
 
-def dequant_values(vq: jnp.ndarray, scale, offset) -> jnp.ndarray:
-    levels = (1 << VALUE_BITS) - 1
+def dequant_values(vq: jnp.ndarray, scale, offset,
+                   value_bits=VALUE_BITS) -> jnp.ndarray:
+    # exp2 keeps the level count exact while accepting a traced value width
+    # (the serving path streams it per layer).
+    levels = jnp.exp2(jnp.asarray(value_bits, jnp.float32)) - 1.0
     return vq.astype(jnp.float32) / levels * scale + offset
 
 
-def densify(first, deltas, vq, scale, offset, r: int) -> jnp.ndarray:
+def densify(first, deltas, vq, scale, offset, r: int,
+            value_bits=VALUE_BITS) -> jnp.ndarray:
     """Dense (r, N) reconstruction of the compressed W_D."""
     idx = decode_indices(first, deltas)  # (nnz, N)
-    vals = dequant_values(vq, scale, offset)
+    vals = dequant_values(vq, scale, offset, value_bits)
     n = idx.shape[1]
     dense = jnp.zeros((r, n), jnp.float32)
     cols = jnp.broadcast_to(jnp.arange(n), idx.shape)
     return dense.at[idx.reshape(-1), cols.reshape(-1)].add(vals.reshape(-1))
 
 
-def smm_reference(y: jnp.ndarray, first, deltas, vq, scale, offset) -> jnp.ndarray:
+def smm_reference(y: jnp.ndarray, first, deltas, vq, scale, offset,
+                  value_bits=VALUE_BITS) -> jnp.ndarray:
     """y (M, r) x compressed W_D (r, N) -> (M, N) f32."""
-    dense = densify(first, deltas, vq, scale, offset, y.shape[1])
+    dense = densify(first, deltas, vq, scale, offset, y.shape[1], value_bits)
     return jnp.dot(y.astype(jnp.float32), dense,
                    preferred_element_type=jnp.float32)

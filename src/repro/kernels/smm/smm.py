@@ -23,6 +23,7 @@ VMEM per step (bm=bn=256, r=1024, nnz=128):
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,13 +33,14 @@ VALUE_BITS = 6
 
 
 def _smm_kernel(y_ref, first_ref, deltas_ref, vq_ref, scale_ref, offset_ref,
-                o_ref, *, r: int, nnz: int):
+                levels_ref, o_ref, *, r: int, nnz: int):
     # ---- decode the stream for this column block
     first = first_ref[...].astype(jnp.int32)  # (bn,)
     deltas = deltas_ref[...].astype(jnp.int32)  # (nnz-1, bn)
     idx = jnp.concatenate([first[None], first[None] + jnp.cumsum(deltas, 0)], 0)
-    levels = (1 << VALUE_BITS) - 1
-    vals = vq_ref[...].astype(jnp.float32) / levels * scale_ref[0] \
+    # Dequant level count (2^value_bits - 1) rides as a scalar operand, like
+    # scale/offset: the value width is part of the stream, not the program.
+    vals = vq_ref[...].astype(jnp.float32) / levels_ref[0] * scale_ref[0] \
         + offset_ref[0]  # (nnz, bn)
 
     # ---- densify: (r, bn) via compare-select accumulation over nnz rows.
@@ -60,13 +62,20 @@ def _smm_kernel(y_ref, first_ref, deltas_ref, vq_ref, scale_ref, offset_ref,
                    static_argnames=("bm", "bn", "interpret"))
 def smm_matmul(y: jnp.ndarray, first: jnp.ndarray, deltas: jnp.ndarray,
                vq: jnp.ndarray, scale: jnp.ndarray, offset: jnp.ndarray,
+               levels: Optional[jnp.ndarray] = None,
                *, bm: int = 256, bn: int = 256,
                interpret: bool = True) -> jnp.ndarray:
-    """z = y @ densify(stream). y (M, r); stream columns N -> (M, N) f32."""
+    """z = y @ densify(stream). y (M, r); stream columns N -> (M, N) f32.
+
+    ``levels`` is the dequant level count ``2^value_bits - 1`` as an f32
+    scalar (possibly traced — value width is per-layer data on the serving
+    path); ``None`` defaults to the module's 6b convention."""
     M, r = y.shape
     nnz, N = vq.shape
     bm, bn = min(bm, M), min(bn, N)
     assert M % bm == 0 and N % bn == 0, (M, N, bm, bn)
+    if levels is None:
+        levels = jnp.float32((1 << VALUE_BITS) - 1)
     grid = (M // bm, N // bn)
     return pl.pallas_call(
         functools.partial(_smm_kernel, r=r, nnz=nnz),
@@ -78,8 +87,10 @@ def smm_matmul(y: jnp.ndarray, first: jnp.ndarray, deltas: jnp.ndarray,
             pl.BlockSpec((nnz, bn), lambda m, n: (0, n)),
             pl.BlockSpec((1,), lambda m, n: (0,)),
             pl.BlockSpec((1,), lambda m, n: (0,)),
+            pl.BlockSpec((1,), lambda m, n: (0,)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda m, n: (m, n)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         interpret=interpret,
-    )(y, first, deltas, vq, scale.reshape(1), offset.reshape(1))
+    )(y, first, deltas, vq, scale.reshape(1), offset.reshape(1),
+      jnp.asarray(levels, jnp.float32).reshape(1))

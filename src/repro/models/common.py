@@ -80,6 +80,12 @@ class ModelConfig:
     n_codebooks: int = 1  # musicgen: 4 parallel EnCodec codebooks
     external_embeddings: bool = False  # vlm/audio: frontend stub supplies (B,S,d)
     factorization: FactorizationConfig = FactorizationConfig()
+    # Weight representation the forward pass consumes: "dense" (dense w /
+    # factorized wd leaves) or "compressed" (the T-REX streaming format from
+    # core/factorized.py compress_model_params — nibble-packed W_S codes +
+    # delta/quantized W_D). apply_linear dispatches per leaf either way; the
+    # config field makes the serving mode explicit and validated.
+    weight_format: str = "dense"
     dtype: str = "bfloat16"  # compute dtype
     param_dtype: str = "float32"
     remat: str = "nothing_saveable"  # jax.checkpoint policy name, or "none"

@@ -432,7 +432,8 @@ def attention_block(
     dt = cfg.compute_dtype
 
     def lin(name, inp, fam):
-        return apply_linear(p[name], inp, dicts, fam, fcfg, sparse_train).astype(dt)
+        return apply_linear(p[name], inp, dicts, fam, fcfg, sparse_train,
+                            compute_dtype=dt).astype(dt)
 
     x_kv = kv if kv is not None else x
     q = lin("wq", x, f"{prefix}_q").reshape(B, S, cfg.n_heads, hd)
@@ -671,7 +672,8 @@ def attention_block(
                 wedge=cfg.causal_wedge,
             ).reshape(B, S, cfg.n_heads * hd)
 
-    y = apply_linear(p["wo"], o, dicts, f"{prefix}_o", fcfg, sparse_train)
+    y = apply_linear(p["wo"], o, dicts, f"{prefix}_o", fcfg, sparse_train,
+                     compute_dtype=dt)
     return y.astype(dt), new_cache
 
 
@@ -703,7 +705,8 @@ def ffn_block(p: Dict, x: jnp.ndarray, *, cfg: ModelConfig, dicts: Optional[Dict
     dt = cfg.compute_dtype
 
     def lin(name, inp, fam):
-        return apply_linear(p[name], inp, dicts, fam, fcfg, sparse_train).astype(dt)
+        return apply_linear(p[name], inp, dicts, fam, fcfg, sparse_train,
+                            compute_dtype=dt).astype(dt)
 
     up = lin("w_up", x, f"{prefix}_up")
     if cfg.act == "swiglu":

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import factorized as factorized_mod
 from repro.core.factorized import DictionaryBank, init_linear
 from repro.core import sparsity
 from repro.models.common import ModelConfig
@@ -130,6 +131,19 @@ def _expert_ffn(buf, p, dicts, cfg, sparse_train, tp_axis: Optional[str]):
         # x: (E_loc, C, d_in)
         if "w" in pp:
             return jnp.einsum("ecd,edf->ecf", x, pp["w"].astype(dt))
+        if "wd_vq" in pp:
+            # Compressed serving: the per-expert W_D streams (and the nibble-
+            # packed family dictionary) are the HBM traffic; the dense forms
+            # below are transient decompression products.
+            ws = factorized_mod.decompress_ws_entry(
+                dicts[family], x.shape[-1], dt)  # (d_in, r)
+            y1 = jnp.einsum("ecd,dr->ecr", x, ws)
+            streams = {k: pp[k] for k in
+                       ("wd_first", "wd_deltas", "wd_vq", "wd_scale",
+                        "wd_offset", "wd_bits") if k in pp}
+            wd = jax.vmap(lambda q: factorized_mod.decompress_wd_leaf(
+                q, ws.shape[1], dt))(streams)  # (E, r, d_out)
+            return jnp.einsum("ecr,erf->ecf", y1, wd)
         ws = dicts[family].astype(dt)  # (d_in, r[_loc])
         wd = pp["wd"]
         if sparse_train and fcfg.ste_in_forward and tp_axis is None:
@@ -145,7 +159,7 @@ def _expert_ffn(buf, p, dicts, cfg, sparse_train, tp_axis: Optional[str]):
             y = jax.lax.psum(y, tp_axis)
         return y
 
-    factorized = "wd" in p["w_up"]
+    factorized = "wd" in p["w_up"] or "wd_vq" in p["w_up"]
     up = mat(p["w_up"], buf, "moe_up")
     gate = mat(p["w_gate"], buf, "moe_gate")
     h = (jax.nn.silu(gate.astype(jnp.float32)) * up.astype(jnp.float32)).astype(dt)
@@ -229,6 +243,12 @@ def moe_ffn(
     """Routed-expert FFN. Returns (y, aux_loss). mesh=None -> local oracle."""
     if mesh is None or mesh.devices.size == 1:
         return _moe_local(p, x, cfg, dicts, sparse_train)
+    if "wd_vq" in p["w_up"]:
+        raise NotImplementedError(
+            "compressed expert weights (wd_vq streams) are local-only for "
+            "now: the EP/TP in_specs shard the dense 'wd' leaf, not the "
+            "streaming format — serve compressed MoE without a mesh, or "
+            "shard dense-factorized params")
 
     P = jax.sharding.PartitionSpec
     axes = mesh.axis_names

@@ -47,7 +47,35 @@ def factorization_regularizer(params: Dict, fcfg: FactorizationConfig) -> jnp.nd
 
 class Model:
     def __init__(self, cfg: ModelConfig):
+        if cfg.weight_format not in ("dense", "compressed"):
+            raise ValueError(
+                f"weight_format must be 'dense' or 'compressed', "
+                f"got {cfg.weight_format!r}")
         self.cfg = cfg
+
+    def with_weight_format(self, fmt: str) -> "Model":
+        """Same model, different weight representation (``dense`` /
+        ``compressed``). The forward pass dispatches per leaf, so this is
+        metadata — but carrying it in the config lets the serving engine
+        label its stats and keeps the mode explicit."""
+        if fmt == self.cfg.weight_format:
+            return self
+        return Model(dataclasses.replace(self.cfg, weight_format=fmt))
+
+    def compress_params(self, params: Dict, value_bits: int = 6):
+        """Offline: factorized params -> T-REX streaming format.
+
+        Returns ``(model, cparams, stats)`` — a ``weight_format="compressed"``
+        model, the compressed tree (nibble-packed W_S codes + delta/quantized
+        W_D streams; everything else passes through), and the stream-bits
+        accounting from
+        :func:`repro.core.factorized.compress_model_params`. Feed
+        ``stats["weight_stream_bits"]`` to the serving engine's
+        ``weight_stream_bits`` for audited bytes-per-token numbers."""
+        from repro.core.factorized import compress_model_params
+        cparams, stats = compress_model_params(
+            params, self.cfg.factorization, value_bits=value_bits)
+        return self.with_weight_format("compressed"), cparams, stats
 
     def with_decode_attn(self, mode: str,
                          block_k: Optional[int] = None) -> "Model":

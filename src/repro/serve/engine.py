@@ -66,6 +66,16 @@ accounting, and — in paged mode — ``kv_memory_ratio`` (mean pages in use
 over pool capacity, the footprint metric), ``preemptions``,
 ``prefix_hit_ratio`` (prompt tokens served from shared pages over prompt
 tokens admitted) and ``pages_shared`` after :meth:`run`.
+
+**Estimated HBM traffic** (``weight_bytes_per_token``,
+``kv_bytes_per_token``, ``bytes_per_token``): every decode step streams
+the full weight set once — audited sub-byte bits via the
+``weight_stream_bits`` kwarg (from ``Model.compress_params``), byte-width
+fallback otherwise — plus the KV bytes of the blocks the predicated
+decode attention actually visits, per attention layer. Serving
+``weight_format="compressed"`` params must drive ``bytes_per_token``
+strictly below the dense-factorized run of the same workload
+(``tools/check_bench.py``).
 """
 from __future__ import annotations
 
@@ -75,6 +85,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.factorized import params_stream_bits
 from repro.core.packing import chunk_prompt
 from repro.kernels.common import resolve_decode_attn
 from repro.kernels.tda.ref import block_stats
@@ -99,7 +110,8 @@ class Engine:
                  paged: bool = True, page_size: Optional[int] = None,
                  pool_frac: float = 1.0, prefix_share: bool = True,
                  temperature: float = 0.0, top_k: Optional[int] = None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 weight_stream_bits: Optional[float] = None):
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -174,10 +186,35 @@ class Engine:
                     for name, spec in self.slots.widths.items()}
         # Distinct attention-lane shapes for the blocks-visited accounting:
         # one (ring, block_k) descriptor per distinct window among the
-        # attention layers (pure-recurrent stacks have none).
-        self._attn_rings = sorted({
-            model._block_ring(k, self.cache_len)
-            for k in kinds if k in ("attn", "local")})
+        # attention layers (pure-recurrent stacks have none). The per-ring
+        # layer counts additionally weight the estimated-KV-bytes metric
+        # (every attention layer streams its own lane's blocks per step).
+        self._ring_layers: Dict[int, int] = {}
+        for i in range(model.cfg.n_layers):
+            k = model.cfg.block_kind(i)
+            if k in ("attn", "local"):
+                ring = model._block_ring(k, self.cache_len)
+                self._ring_layers[ring] = self._ring_layers.get(ring, 0) + 1
+        self._attn_rings = sorted(self._ring_layers)
+        # ---- estimated HBM traffic per decode step (observability; the
+        # gateable analogue of the paper's external-memory-access numbers).
+        # Weights: every decode step streams the full weight set once.
+        # `weight_stream_bits` carries the audited number from
+        # Model.compress_params (sub-byte streams); the fallback prices
+        # every param leaf at its in-memory width.
+        self._weight_stream_bits = (
+            float(weight_stream_bits) if weight_stream_bits is not None
+            else float(params_stream_bits(params)) if params is not None
+            else 0.0)
+        # KV: bytes per cached token actually visited by the predicated
+        # decode attention (int8 codes + per-(token, head) f32 scales under
+        # kv_quant, else K/V at the compute dtype).
+        c = model.cfg
+        if c.kv_quant:
+            self._kv_token_bytes = 2 * c.kv_heads * (c.head_dim + 4)
+        else:
+            self._kv_token_bytes = (2 * c.kv_heads * c.head_dim
+                                    * c.compute_dtype.itemsize)
         # Per-slot sampling seeds + admission order (preemption victims are
         # youngest-first, vLLM-style, so older requests always progress).
         self._seeds = np.zeros(num_slots, np.uint32)
@@ -281,6 +318,7 @@ class Engine:
         decoded_tokens = 0
         blocks_visited = 0
         blocks_dense = 0
+        kv_bytes = 0.0
         preemptions = 0
         pages_used_steps = 0
 
@@ -313,6 +351,11 @@ class Engine:
                     ring, min(self._block_k, ring))
                 blocks_visited += bs["visited"]
                 blocks_dense += bs["dense"]
+                # KV bytes this step: visited blocks x tokens/block, once
+                # per attention layer sharing this ring shape.
+                kv_bytes += (bs["visited"] * min(self._block_k, ring)
+                             * self._ring_layers[ring]
+                             * self._kv_token_bytes)
 
             tables = sl.pool.device_tables() if self.paged else {}
             nxt, sl.caches = self._decode(
@@ -359,6 +402,18 @@ class Engine:
             "prefix_hit_ratio": (self._shared_tokens
                                  / max(self._prompt_tokens, 1)),
             "pages_shared": self._pages_shared,
+            # Estimated HBM bytes moved per decoded token (weights streamed
+            # once per step + KV blocks actually visited) — the serving
+            # analogue of the paper's EMA accounting. Gated by
+            # tools/check_bench.py: compressed serving must move strictly
+            # fewer bytes than dense at equal tokens.
+            "weight_format": self.model.cfg.weight_format,
+            "weight_bytes_per_step": self._weight_stream_bits / 8.0,
+            "weight_bytes_per_token": (steps * self._weight_stream_bits / 8.0
+                                       / max(decoded_tokens, 1)),
+            "kv_bytes_per_token": kv_bytes / max(decoded_tokens, 1),
+            "bytes_per_token": ((steps * self._weight_stream_bits / 8.0
+                                 + kv_bytes) / max(decoded_tokens, 1)),
         }
         return done
 

@@ -86,6 +86,45 @@ def test_compressed_bits_accounting():
     assert bits == 32 * (6 + 5 * 5 + 6 * 6) + 32
 
 
+def test_wd_bits_accounting_target_vs_achieved():
+    """Both accounting modes of ``wd_compressed_bits``: the default prices
+    deltas at the paper-nominal 5b target (the post-reorder format);
+    ``use_achieved_delta_bits=True`` prices the audited width actually
+    needed, even when that is WIDER than the target (regression for the
+    old dead branch that silently clamped it)."""
+    # deltas row 0 absolute, rows 1.. deltas; max delta 40 -> 6 achieved bits
+    deltas = np.array([[3, 7], [40, 2], [1, 40]], np.int32)
+    cwd = comp.CompressedWD(deltas=deltas,
+                            values_q=np.zeros((3, 2), np.uint8),
+                            scale=1.0, offset=0.0, value_bits=6, r=64)
+    assert cwd.achieved_delta_bits == 6 > cwd.target_delta_bits == 5
+    fib = cwd.first_index_bits
+    target = (fib + 2 * 5 + 3 * 6) * 2 + 32
+    achieved = (fib + 2 * 6 + 3 * 6) * 2 + 32
+    assert comp.wd_compressed_bits(cwd) == target
+    assert comp.wd_compressed_bits(cwd, use_achieved_delta_bits=False) \
+        == target
+    assert comp.wd_compressed_bits(cwd, use_achieved_delta_bits=True) \
+        == achieved
+
+
+def test_uniform_dequant_dynamic_bits():
+    """Dequant level count follows the stored width (serving streams it as
+    a runtime scalar), including under jit with a traced bits operand."""
+    import jax
+    v = np.linspace(-2.0, 2.0, 33).astype(np.float32)
+    for bits in (4, 5, 6):
+        q = comp.quantize_uniform(v, bits=bits)
+        deq = np.asarray(comp.dequantize_uniform(
+            jnp.asarray(q.q), q.scale, q.offset, bits=bits))
+        step = q.scale / (2 ** bits - 1)
+        assert np.abs(deq - v).max() <= step * 0.51
+        traced = np.asarray(jax.jit(comp.dequantize_uniform)(
+            jnp.asarray(q.q), jnp.float32(q.scale), jnp.float32(q.offset),
+            jnp.int32(bits)))
+        np.testing.assert_allclose(traced, deq, rtol=1e-6, atol=1e-6)
+
+
 def test_packing_nibbles_roundtrip(rng):
     from repro.core.factorized import pack_nibbles, unpack_nibbles
     codes = rng.integers(0, 16, size=(64, 32)).astype(np.uint8)

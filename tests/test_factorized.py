@@ -10,8 +10,9 @@ from _hypothesis_compat import given, settings, strategies as st
 from repro.core import sparsity
 from repro.core.factorized import (DictionaryBank, FactorizationConfig,
                                    apply_compressed_linear, apply_linear,
-                                   compress_linear, init_linear, linear_macs,
-                                   pack_nibbles)
+                                   compress_linear, decompress_wd_leaf,
+                                   init_linear, linear_macs, pack_nibbles,
+                                   unpack_nibbles)
 from repro.core import compression as comp
 
 FCFG = FactorizationConfig(enabled=True, min_dim=32, rank=64, nnz=8)
@@ -102,6 +103,101 @@ def test_compressed_linear_close_to_dense():
     err = np.abs(np.asarray(y_cmp, np.float32) - ref).mean()
     scale = np.abs(ref).mean()
     assert err / scale < 0.25  # 4b Ws x 6b Wd: coarse but bounded
+
+
+def _mk_compressed(seed, d_in, r, d_out, nnz, value_bits=6):
+    """A full compressed layer (W_S codes+LUT, W_D streams) plus the dense
+    factors it came from."""
+    rng = np.random.default_rng(seed)
+    ws = rng.normal(size=(d_in, r)).astype(np.float32) * 0.2
+    wd = np.asarray(sparsity.project_topk_columns(
+        jnp.asarray(rng.normal(size=(r, d_out)).astype(np.float32)), nnz))
+    fcfg = FactorizationConfig(enabled=True, min_dim=16, rank=r, nnz=nnz)
+    cp = compress_linear({"wd": wd}, {"fam": ws}, "fam", fcfg,
+                         reorder=False, value_bits=value_bits)
+    cws = comp.compress_ws(ws)
+    cdicts = {"fam": {"codes_packed": jnp.asarray(pack_nibbles(cws.codes)),
+                      "lut": jnp.asarray(cws.lut)}}
+    return ws, wd, {k: jnp.asarray(v) for k, v in cp.items()}, cdicts
+
+
+def test_compress_linear_stores_value_bits():
+    """Regression: the runtime dequant used to hardcode 6b while
+    compress_linear never stored the width — any other value_bits silently
+    mis-scaled W_D. At 5b the streamed leaf must now match the 5b dense
+    oracle bit-for-bit."""
+    _, wd, cp, _ = _mk_compressed(0, 64, 32, 24, nnz=4, value_bits=5)
+    assert int(cp["wd_bits"]) == 5
+    oracle = np.asarray(comp.decompress_wd_dense(
+        comp.compress_wd(wd, 4, value_bits=5)))
+    np.testing.assert_array_equal(np.asarray(decompress_wd_leaf(cp, 32)),
+                                  oracle)
+    assert not np.array_equal(
+        oracle,
+        np.asarray(comp.decompress_wd_dense(comp.compress_wd(wd, 4))),
+    )  # 5b and 6b grids genuinely differ, so the width matters
+
+
+def test_pack_nibbles_odd_leading_axis():
+    """Regression: pack_nibbles used to assert on an odd leading axis; it
+    now pads with the zero code and unpack+crop round-trips."""
+    codes = (np.arange(33 * 8, dtype=np.uint8).reshape(33, 8)) % 16
+    packed = pack_nibbles(codes)
+    assert packed.shape == (17, 8)
+    out = np.asarray(unpack_nibbles(jnp.asarray(packed)))
+    assert out.shape == (34, 8)
+    np.testing.assert_array_equal(out[:33], codes)
+    np.testing.assert_array_equal(out[33], np.zeros(8, np.uint8))
+
+
+def test_compressed_linear_odd_d_in():
+    """An odd input width flows through both runtime paths (jnp crops the
+    pad row; the dmm kernel zero-pads the activation instead)."""
+    d_in, r, d_out, nnz = 33, 32, 24, 4
+    ws, wd, cp, cdicts = _mk_compressed(1, d_in, r, d_out, nnz)
+    x = jax.random.normal(jax.random.key(3), (8, d_in))
+    y_jnp = apply_compressed_linear(cp, x, cdicts, "fam",
+                                    compute_dtype=jnp.float32,
+                                    use_kernel=False)
+    y_ker = apply_compressed_linear(cp, x, cdicts, "fam",
+                                    compute_dtype=jnp.float32,
+                                    use_kernel=True)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_jnp),
+                               rtol=1e-4, atol=1e-4)
+    exact = (np.asarray(x) @ ws) @ wd
+    rel = np.abs(np.asarray(y_jnp) - exact).mean() / np.abs(exact).mean()
+    assert rel < 0.25  # bounded by 4b/6b quantization noise
+
+
+def test_apply_linear_dispatches_wd_vq():
+    """apply_linear routes compressed streams without any call-site change:
+    the same entry point serves dense, factorized, and compressed params."""
+    _, _, cp, cdicts = _mk_compressed(2, 64, 32, 24, nnz=4)
+    fcfg = FactorizationConfig(enabled=True, min_dim=16, rank=32, nnz=4)
+    x = jax.random.normal(jax.random.key(4), (8, 64))
+    y = apply_linear(cp, x, cdicts, "fam", fcfg, compute_dtype=jnp.float32)
+    y2 = apply_compressed_linear(cp, x, cdicts, "fam",
+                                 compute_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+
+
+@pytest.mark.parametrize("d_in,r,d_out,nnz", [
+    (60, 32, 36, 8),    # non-tile-multiple M/N (dmm pad/crop path)
+    (33, 16, 24, 4),    # odd d_in through the kernel chain
+    (128, 64, 100, 16),  # non-multiple smm N
+])
+def test_compressed_kernel_path_matches_jnp(d_in, r, d_out, nnz):
+    """Fused dmm+smm serving path vs the pure-jnp reference forward."""
+    _, _, cp, cdicts = _mk_compressed(5, d_in, r, d_out, nnz)
+    x = jax.random.normal(jax.random.key(6), (16, d_in))
+    y_jnp = apply_compressed_linear(cp, x, cdicts, "fam",
+                                    compute_dtype=jnp.float32,
+                                    use_kernel=False)
+    y_ker = apply_compressed_linear(cp, x, cdicts, "fam",
+                                    compute_dtype=jnp.float32,
+                                    use_kernel=True)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_jnp),
+                               rtol=1e-4, atol=1e-4)
 
 
 def test_rank_uses_min_dim():

@@ -32,6 +32,7 @@ def _mk_ws(K, N):
     (32, 64, 48, 32, 32, 64),
     (64, 128, 96, 32, 32, 32),
     (100, 60, 36, 32, 32, 32),   # padding path
+    (32, 33, 16, 16, 16, 32),    # odd K: nibble-pack pad row + x zero-pad
     (16, 256, 128, 16, 128, 128),
     (128, 128, 128, 64, 64, 64),
 ])
@@ -66,6 +67,28 @@ def test_smm_matches_ref(M, r, N, nnz, bm, bn):
     ref = smm_reference(y, first, deltas, vq, jnp.float32(cwd.scale),
                         jnp.float32(cwd.offset))
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("value_bits", [4, 5, 7])
+def test_smm_non_default_value_bits(value_bits):
+    """The kernel's dequant level count is a runtime operand, not baked to
+    6b: kernel vs reference vs dense-dequant oracle at other widths."""
+    M, r, N, nnz = 32, 64, 48, 8
+    wd = RNG.normal(size=(r, N)).astype(np.float32)
+    cwd = comp.compress_wd(wd, nnz, value_bits=value_bits)
+    first = jnp.asarray(comp.delta_decode(cwd.deltas)[0].astype(np.int32))
+    deltas = jnp.asarray(cwd.deltas[1:].astype(np.uint8))
+    vq = jnp.asarray(cwd.values_q)
+    y = jnp.asarray(RNG.normal(size=(M, r)).astype(np.float32))
+    out = compressed_matmul(y, first, deltas, vq, cwd.scale, cwd.offset,
+                            value_bits=value_bits, bm=32, bn=48)
+    ref = smm_reference(y, first, deltas, vq, jnp.float32(cwd.scale),
+                        jnp.float32(cwd.offset), value_bits=value_bits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    oracle = y @ jnp.asarray(comp.decompress_wd_dense(cwd))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
                                rtol=1e-4, atol=1e-4)
 
 

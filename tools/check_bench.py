@@ -15,6 +15,12 @@ the offending key named:
     prefix cache actually serves pages.
   * ``prefix.kv_memory_ratio`` < ``prefix.kv_memory_ratio_noshare`` —
     sharing strictly shrinks the footprint of the same workload.
+  * ``compressed.bytes_per_token`` <
+    ``compressed.bytes_per_token_dense`` — serving the nibble-packed
+    W_S / delta-coded W_D streams moves strictly fewer estimated HBM
+    bytes per decoded token than the dense-factorized leaves.
+  * ``compressed.decoded_tokens`` == ``compressed.decoded_tokens_dense``
+    — the bytes comparison is at equal tokens on the same workload.
 * ``BENCH_decode_attn.json``
   * ``kv_block_ratio`` < 0.7 — the TDA kernel's predicated grid visits
     blocks in proportion to occupancy, not capacity.
@@ -49,6 +55,14 @@ GATES = [
      "footprint)"),
     ("BENCH_decode.json", "prefix.pages_shared",
      lambda v, rec: v > 0, "> 0 (physical pages actually shared)"),
+    ("BENCH_decode.json", "compressed.bytes_per_token",
+     lambda v, rec: 0.0 < v < rec["compressed"]["bytes_per_token_dense"],
+     "in (0, compressed.bytes_per_token_dense) (compressed serving must "
+     "move strictly fewer estimated bytes per token)"),
+    ("BENCH_decode.json", "compressed.decoded_tokens",
+     lambda v, rec: v == rec["compressed"]["decoded_tokens_dense"],
+     "== compressed.decoded_tokens_dense (bytes compared at equal tokens "
+     "on the same workload)"),
     ("BENCH_decode_attn.json", "kv_block_ratio",
      lambda v, rec: v < 0.7, "< 0.7 (predicated TDA grid vs dense sweep)"),
 ]

@@ -49,6 +49,13 @@ REQUIRED_ANCHORS = [
     ("serving.md", "pages_shared"),
     ("serving.md", "LRU"),
     ("serving.md", "tools/check_bench.py"),
+    # compressed-weight serving contract: format switch, traffic metric,
+    # tracked bench row
+    ("README.md", "bytes_per_token"),
+    ("README.md", "decode/compressed"),
+    ("serving.md", "weight_format"),
+    ("serving.md", "bytes_per_token"),
+    ("serving.md", "decode/compressed"),
 ]
 
 PATH_RE = re.compile(
