@@ -420,6 +420,33 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
     cm_s, cm = run_compressed(model_c, params_c,
                               wstats["weight_stream_bits"])
 
+    # ---- degraded serving: the SAME paged workload under a seeded
+    # FaultPlan (scheduled NaN injections + forced preemptions, a dash of
+    # probabilistic ones). The row tracks that the failure-hardened path —
+    # quarantine, preempt-recovery, terminal-status accounting — stays
+    # within a fixed factor of clean throughput instead of collapsing or
+    # deadlocking; check_bench gates tokens_per_s >= clean/4, at least one
+    # injected fault, and at least one counted failure. A FaultPlan
+    # rebuilds a fresh injector per run, so the compile pass and the timed
+    # pass replay the identical fault schedule.
+    from repro.serve import FaultPlan
+    plan = FaultPlan(seed=7, p_forced_preempt=0.1, max_faults=6,
+                     nan_at=((1, 0), (1, 1), (2, 2), (2, 3)),
+                     preempt_at=(4,))
+    deng = Engine(model, params, max_len=max_len, max_new_tokens=max_new,
+                  num_slots=num_slots, decode_block_k=32, paged=True,
+                  page_size=8, prefix_share=False, faults=plan)
+    for r in workload():
+        deng.submit(r)
+    deng.run()  # compile
+    t0 = time.perf_counter()
+    for r in workload():
+        deng.submit(r)
+    deg_done = deng.run()
+    dg_s = time.perf_counter() - t0
+    dg = deng.decode_stats
+    dg_tokens = sum(len(r.output) for r in deg_done)
+
     ARTIFACTS["decode"] = {
         "tokens_per_s": useful / ct_s,
         "tokens_per_s_lockstep": useful / ls_s,
@@ -461,6 +488,25 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
             "tokens_per_s_dense": useful_c / fd_s,
             "weight_compression_ratio": wstats["weight_compression_ratio"],
         },
+        # tracked degraded-serving gates (tools/check_bench.py): under the
+        # seeded fault plan the engine must keep >= 1/4 of the clean paged
+        # throughput, actually inject faults, and land every one of them
+        # in a counted terminal status (failed > 0 proves the quarantine
+        # fired; ok + failed == n_requests proves nothing leaked).
+        "degraded": {
+            "tokens_per_s": dg_tokens / dg_s,
+            "tokens_per_s_clean": useful / pg_s,
+            "delivered_tokens": dg_tokens,
+            "completed_ok": dg["completed_ok"],
+            "failed": dg["failed"],
+            "shed": dg["shed"],
+            "timed_out": dg["timed_out"],
+            "n_requests": n_requests,
+            "faults_injected_total": sum(dg["faults_injected"].values()),
+            "faults_injected": dg["faults_injected"],
+            "preemptions_recovered": dg["preemptions_recovered"],
+            "audit_violations": dg["audit_violations"],
+        },
     }
     return [
         ("decode/lockstep", ls_s * 1e6,
@@ -489,6 +535,11 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
          f"arch={win['arch']} tok/s={win['tokens_per_s']:.0f} "
          f"slot_util={win['slot_utilization']:.2f} "
          f"kv_ratio={win['kv_block_ratio']:.2f} (ring lanes)"),
+        ("decode/degraded", dg_s * 1e6,
+         f"tok/s={dg_tokens / dg_s:.0f} vs clean {useful / pg_s:.0f} "
+         f"(gate >=1/4) ok={dg['completed_ok']} failed={dg['failed']} "
+         f"faults={sum(dg['faults_injected'].values())} "
+         f"recovered_preempts={dg['preemptions_recovered']}"),
         ("decode/compressed", cm_s * 1e6,
          f"bytes/tok={cm['bytes_per_token']:.0f} vs dense "
          f"{fd['bytes_per_token']:.0f} "

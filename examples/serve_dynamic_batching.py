@@ -13,6 +13,12 @@ cache-kind agnostic (docs/serving.md):
   buffered short-window attention lanes, row-per-request prefill) — the
   stacks that used to fall back to seed-style lock-step decode.
 
+The last section serves a misbehaving burst through the failure-hardened
+path (docs/serving.md, "Serving failure model"): a bounded pending queue
+sheds overload, deadlines expire stragglers, an injected NaN is
+quarantined to its slot — and every request comes back in a counted
+terminal status.
+
   PYTHONPATH=src python examples/serve_dynamic_batching.py
 """
 import jax
@@ -21,7 +27,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.data import request_lengths
 from repro.models.transformer import Model
-from repro.serve import Engine, Request
+from repro.serve import Engine, FaultPlan, Request, TERMINAL_STATUSES
 
 
 def main():
@@ -100,6 +106,36 @@ def main():
           f"slot utilization {rds['slot_utilization']:.2f}, "
           f"kv-block ratio {rds['kv_block_ratio']:.2f} "
           f"(row-per-request right-aligned prefill; see docs/serving.md)")
+
+    # ---- degraded serving: a misbehaving burst through the hardened
+    # path. max_pending bounds the queue (newest submits shed), tight
+    # ttl_steps expire whatever queues too long, and a seeded FaultPlan
+    # injects a NaN mid-decode — quarantined to its slot while every
+    # other request keeps its exact tokens. Audits re-check the pool
+    # invariants every iteration.
+    deng = Engine(model, params, max_len=64, max_new_tokens=8, num_slots=2,
+                  page_size=16, max_pending=8, audit=True,
+                  faults=FaultPlan(seed=3, nan_at=((2, 0),)))
+    for rid, n in enumerate(request_lengths(16, max_len=64, dist="bert")):
+        deng.submit(Request(rid=200 + rid, prompt=rng.integers(
+            0, cfg.vocab_size, size=int(n)).astype(np.int32),
+            max_new_tokens=6, ttl_steps=40))
+    ddone = deng.run()
+    dds = deng.decode_stats
+    counts = {s: n for s, n in dds["status_counts"].items() if n}
+    print(f"\ndegraded burst (2 slots, max_pending=8, ttl=40 ticks, one "
+          f"injected NaN, audits on): {len(ddone)} requests back, "
+          f"per-status counts {counts}")
+    assert sum(dds["status_counts"].values()) == len(ddone)
+    assert all(r.status in TERMINAL_STATUSES for r in ddone)
+    failed = [r for r in ddone if r.status == "failed"]
+    if failed:
+        print(f"  e.g. request {failed[0].rid} failed: "
+              f"{failed[0].status_reason}")
+    print(f"  faults injected {dds['faults_injected']}, "
+          f"{dds['audit_violations']} audit violations "
+          f"(every fault lands in a counted terminal status — "
+          f"tests/test_faults.py pins this)")
 
 
 if __name__ == "__main__":

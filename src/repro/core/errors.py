@@ -1,0 +1,40 @@
+"""Structured serving/runtime errors shared across layers.
+
+Two families, both importable from anywhere (``core`` sits below both
+``models/`` and ``serve/``, so neither import direction inverts layering):
+
+* :class:`UnsupportedConfigError` — a *configuration* is outside the
+  supported envelope (e.g. compressed MoE expert streams on a multi-device
+  mesh). Raised at construction time wherever possible so a bad deployment
+  fails before it has served a single token, with an actionable message.
+* :class:`AuditError` — a *runtime invariant* was violated. Raised by the
+  opt-in audit mode (``Engine(audit=True)``, ``PagePool.check_invariants``)
+  with the failing check's name and detail, so a production trip is
+  machine-classifiable instead of a bare ``AssertionError``.
+"""
+from __future__ import annotations
+
+__all__ = ["UnsupportedConfigError", "AuditError"]
+
+
+class UnsupportedConfigError(ValueError):
+    """A model/engine configuration that cannot be served correctly.
+
+    Subclasses ``ValueError`` so existing construction-time validation
+    handlers keep working; the message always names what to change.
+    """
+
+
+class AuditError(AssertionError):
+    """A runtime invariant audit failed.
+
+    ``check`` is a short stable identifier (e.g. ``"refcount-drift"``,
+    ``"cow-write-shared"``); ``detail`` is the human-readable specifics.
+    Subclasses ``AssertionError``: audits are production assertions, and
+    test harnesses that catch assertion failures see these the same way.
+    """
+
+    def __init__(self, check: str, detail: str):
+        self.check = check
+        self.detail = detail
+        super().__init__(f"[audit:{check}] {detail}")

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import factorized as factorized_mod
+from repro.core.errors import UnsupportedConfigError
 from repro.core.factorized import DictionaryBank, init_linear
 from repro.core import sparsity
 from repro.models.common import ModelConfig
@@ -244,11 +245,15 @@ def moe_ffn(
     if mesh is None or mesh.devices.size == 1:
         return _moe_local(p, x, cfg, dicts, sparse_train)
     if "wd_vq" in p["w_up"]:
-        raise NotImplementedError(
+        # Engine(...) raises this at construction so a bad deployment
+        # fails before serving a token; this raise is the mid-decode
+        # backstop for callers that bypass the engine.
+        raise UnsupportedConfigError(
             "compressed expert weights (wd_vq streams) are local-only for "
             "now: the EP/TP in_specs shard the dense 'wd' leaf, not the "
-            "streaming format — serve compressed MoE without a mesh, or "
-            "shard dense-factorized params")
+            "streaming format. Either serve compressed MoE without a mesh "
+            "(mesh=None / a 1-device mesh), or serve dense-factorized "
+            "params (skip Model.compress_params) on the mesh.")
 
     P = jax.sharding.PartitionSpec
     axes = mesh.axis_names

@@ -29,14 +29,25 @@ Architecture:
   preempt-and-requeue when the pool exhausts, for every ``configs/``
   architecture (the lock-step fallback is gone).
 
+* :mod:`repro.serve.faults` — ``FaultPlan`` / ``FaultInjector``: the
+  seeded, deterministic chaos harness behind the engine's failure
+  hardening (page-allocation failures, forced preemptions, NaN logits,
+  artificial stalls). Every request the engine returns carries a terminal
+  ``status`` (``ok | rejected | shed | timed_out | failed``); the opt-in
+  ``Engine(audit=True)`` mode re-checks the pool/CoW invariants each step
+  with a structured ``AuditError``.
+
 See ``docs/serving.md`` for the slot-engine lifecycle, the page-table
-contract and the benchmark sidecar contract.
+contract, the serving failure model, and the benchmark sidecar contract.
 """
+from repro.core.errors import AuditError, UnsupportedConfigError  # noqa: F401
 from repro.serve.engine import Engine  # noqa: F401
+from repro.serve.faults import FaultInjector, FaultPlan  # noqa: F401
 from repro.serve.kv_slots import SlotKVCache, SlotStateTable  # noqa: F401
 from repro.serve.pages import PagePool  # noqa: F401
 from repro.serve.sampling import sample_tokens  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
+    TERMINAL_STATUSES,
     Admission,
     DynamicBatcher,
     Request,
@@ -45,4 +56,5 @@ from repro.serve.scheduler import (  # noqa: F401
 
 __all__ = ["Engine", "SlotKVCache", "SlotStateTable", "PagePool",
            "sample_tokens", "Scheduler", "DynamicBatcher", "Request",
-           "Admission"]
+           "Admission", "FaultPlan", "FaultInjector", "AuditError",
+           "UnsupportedConfigError", "TERMINAL_STATUSES"]

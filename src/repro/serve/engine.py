@@ -67,6 +67,39 @@ over pool capacity, the footprint metric), ``preemptions``,
 ``prefix_hit_ratio`` (prompt tokens served from shared pages over prompt
 tokens admitted) and ``pages_shared`` after :meth:`run`.
 
+**Failure hardening** (``docs/serving.md``, "Serving failure model"):
+every request the engine returns carries a terminal ``status`` (``ok |
+rejected | shed | timed_out | failed``) and the engine degrades instead
+of stalling or crashing when the workload misbehaves:
+
+* **admission control at the door** — :meth:`submit` sheds the newest
+  request when the bounded pending queue (``max_pending``) is full, and
+  rejects never-admissible requests (a lane that can never be allocated
+  from the pool's total page budget) immediately instead of letting them
+  head-block the FIFO forever.
+* **deadlines** — per-request ``ttl_steps`` (or the engine-wide
+  ``default_ttl_steps``) expire queued *and* in-flight requests against a
+  deterministic virtual clock (one tick per run-loop iteration).
+* **numeric guard** — the decode step carries an in-graph finiteness
+  check on the logits: a slot whose logits go NaN/Inf reports the ``-1``
+  sentinel through the existing single token fetch (no extra device
+  sync) and is quarantined alone — pages freed, ``status="failed"`` —
+  while every other slot's tokens stay bit-identical.
+* **progress guards** — a per-request preemption budget
+  (``max_preemptions`` / ``max_preemptions_per_request``) escalates
+  admit→preempt thrash to ``failed``, and a no-progress watchdog fails
+  the queue head after ``watchdog_patience`` consecutive idle iterations
+  so a run can never deadlock.
+* **audits** — ``audit=True`` (or env ``REPRO_SERVE_AUDIT=1``) re-checks
+  the pool invariants, each active lane's block-table/``[lo, hi)``
+  consistency, and the CoW write-target-is-private postcondition every
+  iteration, raising a structured ``AuditError``.
+* **fault injection** — ``faults=FaultPlan(...)`` threads a seeded
+  :class:`~repro.serve.faults.FaultInjector` through the allocation,
+  preemption, logit, and clock seams for deterministic chaos testing;
+  a fresh injector is built per :meth:`run` so every run replays the
+  same schedule.
+
 **Estimated HBM traffic** (``weight_bytes_per_token``,
 ``kv_bytes_per_token``, ``bytes_per_token``): every decode step streams
 the full weight set once — audited sub-byte bits via the
@@ -79,21 +112,29 @@ strictly below the dense-factorized run of the same workload
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+import os
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.errors import AuditError, UnsupportedConfigError
 from repro.core.factorized import params_stream_bits
 from repro.core.packing import chunk_prompt
 from repro.kernels.common import resolve_decode_attn
 from repro.kernels.tda.ref import block_stats
 from repro.models.transformer import Model
+from repro.serve.faults import FaultInjector, FaultPlan
 from repro.serve.kv_slots import SlotKVCache
 from repro.serve.pages import PrefixHit
 from repro.serve.sampling import sample_tokens
-from repro.serve.scheduler import Admission, Request, Scheduler
+from repro.serve.scheduler import (
+    TERMINAL_STATUSES,
+    Admission,
+    Request,
+    Scheduler,
+)
 
 __all__ = ["Engine"]
 
@@ -111,7 +152,27 @@ class Engine:
                  pool_frac: float = 1.0, prefix_share: bool = True,
                  temperature: float = 0.0, top_k: Optional[int] = None,
                  seed: int = 0,
-                 weight_stream_bits: Optional[float] = None):
+                 weight_stream_bits: Optional[float] = None,
+                 audit: Optional[bool] = None,
+                 faults=None,
+                 max_pending: Optional[int] = None,
+                 default_ttl_steps: Optional[int] = None,
+                 max_preemptions_per_request: Optional[int] = None,
+                 watchdog_patience: int = 64,
+                 page_cap: Optional[int] = None):
+        # Fail unsupported deployments at construction, not mid-decode:
+        # compressed MoE expert streams (wd_vq) cannot ride moe_ffn's
+        # sharded EP/TP path, whose in_specs shard the dense 'wd' leaf.
+        if (mesh is not None and model.cfg.moe is not None
+                and model.cfg.weight_format == "compressed"
+                and getattr(getattr(mesh, "devices", None), "size", 1) > 1):
+            raise UnsupportedConfigError(
+                "cannot serve compressed MoE expert weights (wd_vq "
+                f"streams) on a {mesh.devices.size}-device mesh: moe_ffn's "
+                "EP/TP in_specs shard the dense 'wd' leaf, not the "
+                "streaming format. Either serve without a mesh (mesh=None "
+                "or a 1-device mesh), or serve dense-factorized params "
+                "(skip Model.compress_params) on the mesh.")
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -156,7 +217,8 @@ class Engine:
             self._block_k = self.page_size  # grid == pages: keep stats honest
         self.slots = SlotKVCache(model, num_slots, self.cache_len,
                                  page_size=self.page_size,
-                                 pool_frac=pool_frac)
+                                 pool_frac=pool_frac,
+                                 page_cap=page_cap if self.paged else None)
         # Page-level prefix sharing: only meaningful for paged stacks whose
         # cache is *entirely* per-token kv lanes — a recurrent layer would
         # need its end-of-prefix state, which is neither paged nor
@@ -222,6 +284,41 @@ class Engine:
         self._seq = 0
         self.stats: List[Dict] = []  # one entry per prefill sweep
         self.decode_stats: Dict = {}
+        # ---- failure hardening (docs/serving.md, "Serving failure model")
+        # Audit mode: env-defaulted so CI can run the whole equivalence
+        # suite with production invariant audits on (REPRO_SERVE_AUDIT=1)
+        # without duplicating any test.
+        if audit is None:
+            audit = bool(int(os.environ.get("REPRO_SERVE_AUDIT", "0") or 0))
+        self.audit = bool(audit)
+        self.max_pending = max_pending
+        self.default_ttl = default_ttl_steps
+        self.max_preempt = max_preemptions_per_request
+        self.watchdog_patience = int(watchdog_patience)
+        # Fault injection: a FaultPlan builds a FRESH injector per run()
+        # (every run replays the same seeded schedule); an injector
+        # instance is used as-is (schedule continues across runs).
+        self._fault_plan: Optional[FaultPlan] = None
+        self.fault_injector: Optional[FaultInjector] = None
+        if isinstance(faults, FaultPlan):
+            self._fault_plan = faults if faults.any_faults() else None
+        elif isinstance(faults, FaultInjector):
+            self.fault_injector = faults
+        elif faults is not None:
+            raise TypeError("faults must be a FaultPlan or FaultInjector")
+        self._inj: Optional[FaultInjector] = None  # current run's injector
+        # Deterministic virtual clock: one tick per run-loop iteration
+        # (plus injected stall ticks); deadlines count against it.
+        self._clock = 0
+        # Per-engine terminal-status counters, reported (then reset) in
+        # decode_stats["status_counts"]; requests finished outside a slot
+        # (shed/rejected at submit) park in _terminal until the next run().
+        self._counts: Dict[str, int] = {s: 0 for s in TERMINAL_STATUSES}
+        self._terminal: List[Request] = []
+        self._audit_violations = 0
+        # All-false nan-injection mask: committed once so the no-fault hot
+        # path re-passes the same device array every step.
+        self._no_nan = jnp.zeros(num_slots, bool)
 
         def prefill_fn(params, batch):
             rows, width = batch["inputs"].shape
@@ -247,7 +344,7 @@ class Engine:
             return logits, new_caches
 
         def decode_fn(params, tokens, caches, lengths, active, seeds,
-                      tables):
+                      tables, nan_mask):
             pages = None
             if self.paged:
                 def entry(w):
@@ -262,6 +359,9 @@ class Engine:
                 params, {"inputs": tokens}, caches, lengths,
                 slot_mask=active, pages=pages, mesh=mesh)
             row = logits[:, 0, :]
+            # Fault injection lands *after* the model: caches never see
+            # the poison and other slots are untouched by construction.
+            row = jnp.where(nan_mask[:, None], jnp.nan, row)
             if self.temperature > 0:
                 # The drawn token's absolute position is lengths + 1: the
                 # same (request, position) key a preempted-then-resumed
@@ -270,6 +370,12 @@ class Engine:
                                     self.temperature, self.top_k)
             else:
                 nxt = jnp.argmax(row, axis=-1).astype(jnp.int32)
+            # In-graph finiteness guard: a slot whose logits went NaN/Inf
+            # (flaky kernel, injected fault) reports the -1 sentinel —
+            # vocab ids are >= 0 — through the run loop's existing single
+            # token fetch, so quarantine costs no extra device sync.
+            bad = ~jnp.all(jnp.isfinite(row), axis=-1)
+            nxt = jnp.where(bad, jnp.int32(-1), nxt)
             return nxt, new_caches
 
         # One compile per prefill shape — widths are max_len multiples and
@@ -296,17 +402,63 @@ class Engine:
     # ------------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
-        # No page-capacity check needed: PagePool floors every width class
-        # at one full lane's pages, so a lone max-size request always fits
-        # (tests/test_pages.py::test_pool_floor_fits_one_max_size_request);
-        # the scheduler's cache-capacity bound is the only hard reject.
-        self.scheduler.submit(req)
+        """Queue a request, applying admission control at the door.
+
+        * **Load shedding**: with ``max_pending`` set, a submit that finds
+          the pending queue full is shed deterministically (the *newest*
+          request loses; everything already queued keeps its FIFO place)
+          with ``status="shed"`` — it is returned by the next :meth:`run`
+          instead of being queued.
+        * **Never-admissible rejection**: a prompt whose lane can never be
+          allocated — its per-class page demand exceeds the pool's *total*
+          page budget (reachable only under an explicit ``page_cap``;
+          ``pool_frac`` floors every class at one full lane) — would
+          head-block the FIFO forever. It is refused here with
+          ``status="rejected"`` and a reason naming the short class.
+        * The scheduler's hard cache-capacity bound (prompt longer than
+          ``max_prompt_len``) still raises ``ValueError`` — that is a
+          caller bug, not traffic — with ``status`` set for uniformity.
+        """
+        if (self.max_pending is not None
+                and self.scheduler.pending() >= self.max_pending):
+            self._finish_terminal(
+                req, "shed",
+                f"pending queue full ({self.scheduler.pending()} queued >= "
+                f"max_pending={self.max_pending})")
+            return
+        if self.paged:
+            pool = self.slots.pool
+            for w, need in pool.class_needs(len(req.prompt) + 1).items():
+                cap = pool.classes[w].num_pages
+                if need > cap:
+                    self._finish_terminal(
+                        req, "rejected",
+                        f"never admissible: prompt ({len(req.prompt)} "
+                        f"tokens) needs {need} width-{w} pages but the "
+                        f"pool holds {cap} total — would head-block the "
+                        "queue forever")
+                    return
+        try:
+            self.scheduler.submit(req)
+        except ValueError as e:
+            req.status = "rejected"
+            req.status_reason = str(e)
+            raise
+        req._submit_clock = self._clock  # type: ignore[attr-defined]
 
     def run(self) -> List[Request]:
         """Serve until queue and slots are empty; returns finished requests
-        in completion order."""
+        in completion order (every one carrying a terminal ``status``,
+        including requests shed/rejected at submit time)."""
         sl = self.slots
-        done: List[Request] = []
+        # A FaultPlan replays from scratch every run (deterministic chaos);
+        # an explicit FaultInjector instance persists across runs.
+        inj = FaultInjector(self._fault_plan) \
+            if self._fault_plan is not None else self.fault_injector
+        self._inj = inj
+        self.fault_injector = inj
+        done: List[Request] = list(self._terminal)  # shed/rejected at submit
+        self._terminal.clear()
         cur = np.zeros(self.num_slots, np.int32)      # next input token
         emitted = np.zeros(self.num_slots, np.int32)  # tokens emitted so far
         budget = np.zeros(self.num_slots, np.int32)
@@ -314,15 +466,34 @@ class Engine:
         self._prompt_tokens = 0   # prompt tokens admitted (incl. resumes)
         self._pages_shared = 0    # page mappings served from the cache
         steps = 0
+        iters = 0
         active_slot_steps = 0
         decoded_tokens = 0
         blocks_visited = 0
         blocks_dense = 0
         kv_bytes = 0.0
         preemptions = 0
+        preempt_recovered = 0
         pages_used_steps = 0
+        idle = 0  # consecutive iterations with nothing decoded or admitted
 
         while self.scheduler.pending() or sl.active.any():
+            # Virtual clock: one tick per iteration, plus injected stall
+            # ticks — so deadlines age deterministically even while the
+            # queue is head-blocked with nothing decoding.
+            self._clock += 1
+            if inj is not None:
+                self._clock += inj.begin_step(iters, self.num_slots,
+                                              sl.active)
+            iters += 1
+            progressed = self._expire(done) > 0
+            if inj is not None and inj.forced_preempt() and sl.active.any():
+                victims = np.flatnonzero(sl.active)
+                victim = int(max(victims,
+                                 key=lambda v: self._admit_seq[v]))
+                if self._preempt_or_fail(victim, done):
+                    preempt_recovered += 1
+                preemptions += 1
             if self.paged:
                 # Lanes grow one page at a time; make every active slot's
                 # next write position resident, preempting the youngest
@@ -331,14 +502,34 @@ class Engine:
                 # in-flight lanes don't need this step — together with
                 # assign_many's one-ahead allocation, an admitted request
                 # always survives to its first decode step.
-                preemptions += self._ensure_pages()
+                rec, esc = self._ensure_pages(done)
+                preemptions += rec + esc
+                preempt_recovered += rec
             if self.scheduler.pending():
                 free = sl.free_slots()
                 if free.size:
-                    self._admit(free, cur, emitted, budget, done)
+                    n_done = len(done)
+                    admitted = self._admit(free, cur, emitted, budget, done)
+                    progressed |= admitted > 0 or len(done) > n_done
             active_ix = np.flatnonzero(sl.active)
+            if self.audit:
+                self._audit_step()
             if active_ix.size == 0:
-                continue  # everything admitted finished at prefill
+                # Nothing to decode: either everything admitted finished
+                # at prefill (progress) or the queue head is blocked. The
+                # watchdog bounds the blocked case — after
+                # ``watchdog_patience`` consecutive no-progress iterations
+                # the head is escalated to status="failed", so the loop
+                # can never spin forever.
+                if progressed:
+                    idle = 0
+                else:
+                    idle += 1
+                    if idle > self.watchdog_patience:
+                        self._watchdog_escalate(done)
+                        idle = 0
+                continue
+            idle = 0
 
             # Predicated-kernel work accounting: the TDA grid visits only
             # the kv blocks covering each active lane's occupancy (+1 for
@@ -357,11 +548,16 @@ class Engine:
                              * self._ring_layers[ring]
                              * self._kv_token_bytes)
 
+            nan_mask = self._no_nan
+            if inj is not None:
+                m = inj.nan_mask()
+                if m is not None:
+                    nan_mask = jnp.asarray(m)
             tables = sl.pool.device_tables() if self.paged else {}
             nxt, sl.caches = self._decode(
                 self.params, jnp.asarray(cur[:, None]), sl.caches,
                 jnp.asarray(sl.lengths), jnp.asarray(sl.active),
-                jnp.asarray(self._seeds), tables)
+                jnp.asarray(self._seeds), tables, nan_mask)
             nxt = np.asarray(nxt)  # the step's single host sync
             steps += 1
             active_slot_steps += active_ix.size
@@ -371,12 +567,23 @@ class Engine:
                 sl.advance(s)
                 tok = int(nxt[s])
                 req = sl.request[s]
+                if tok < 0:
+                    # Non-finite logits: quarantine exactly this slot —
+                    # free its pages, mark it failed, keep serving the
+                    # rest (their tokens are bit-identical by
+                    # construction: lanes are independent and the poison
+                    # never reached the caches).
+                    sl.release(s)
+                    self._finish(req, "failed",
+                                 "non-finite logits (NaN/Inf) in the "
+                                 "decode step", done)
+                    continue
                 req.output.append(tok)
                 emitted[s] += 1
                 cur[s] = tok
                 decoded_tokens += 1
                 if emitted[s] >= budget[s] or tok == self.eos_id:
-                    done.append(req)
+                    self._finish(req, "ok", None, done)
                     sl.release(s)
 
         self.decode_stats = {
@@ -414,31 +621,61 @@ class Engine:
             "kv_bytes_per_token": kv_bytes / max(decoded_tokens, 1),
             "bytes_per_token": ((steps * self._weight_stream_bits / 8.0
                                  + kv_bytes) / max(decoded_tokens, 1)),
+            # Failure-model counters (docs/serving.md): terminal statuses
+            # since the last run (submit-time sheds/rejects included),
+            # preemption recovery split, audit trips (0 on any run that
+            # returned — an audit failure raises), and the fault
+            # injector's tally for chaos-test reconciliation.
+            "status_counts": dict(self._counts),
+            "completed_ok": self._counts["ok"],
+            "shed": self._counts["shed"],
+            "rejected": self._counts["rejected"],
+            "timed_out": self._counts["timed_out"],
+            "failed": self._counts["failed"],
+            "preemptions_recovered": preempt_recovered,
+            "audit_violations": self._audit_violations,
+            "faults_injected": dict(inj.counts) if inj is not None else {},
+            "clock_ticks": self._clock,
         }
+        self._counts = {s: 0 for s in TERMINAL_STATUSES}
+        self._inj = None
         return done
 
     # ------------------------------------------------------------------
 
-    def _ensure_pages(self) -> int:
+    def _ensure_pages(self, done: List[Request]) -> Tuple[int, int]:
         """Make every active slot's next write position writable (oldest
         request first): allocate missing pages, copy-on-write pages other
         slots still share (a ring lane wrapping into the shared prefix),
         and unpublish sole-owner pages the prefix cache still indexes —
         a shared or published page is never mutated in place. When the
         pool is dry (free list empty *and* no refcount-0 retained pages
-        left to evict), preempt-and-requeue the *youngest* active request
-        until the write fits; returns the preemption count. The oldest
-        request can always make progress: preempting every other holder
-        drives its pages' refcounts to one."""
+        left to evict — or a fault injector forces the failure),
+        preempt-and-requeue the *youngest* active request until the write
+        fits. The oldest request can always make progress: preempting
+        every other holder drives its pages' refcounts to one.
+
+        Returns ``(recovered, escalated)`` preemption counts: recovered
+        victims were requeued; escalated ones exhausted their preemption
+        budget (or, with no victim left to evict under a hard
+        ``page_cap``, could not grow at all) and were failed."""
         sl, pool = self.slots, self.slots.pool
-        n_preempt = 0
+        inj = self._inj
+        n_rec = n_esc = 0
         order = sorted(np.flatnonzero(sl.active),
                        key=lambda s: self._admit_seq[s])
         for s in order:
             if not sl.active[s]:
                 continue  # preempted as a victim earlier in this pass
+            suppress = False  # stop injecting once s is the sole survivor
             while True:
-                ok, copies = pool.make_writable(int(s), int(sl.lengths[s]))
+                injected = (not suppress and inj is not None
+                            and inj.alloc_fail())
+                if injected:
+                    ok, copies = False, []
+                else:
+                    ok, copies = pool.make_writable(int(s),
+                                                    int(sl.lengths[s]))
                 if ok:
                     if copies:
                         sl.copy_pages(copies)
@@ -446,13 +683,150 @@ class Engine:
                 victims = np.flatnonzero(sl.active)
                 victim = int(max(victims, key=lambda v: self._admit_seq[v]))
                 if victim == s and victims.size == 1:
-                    raise RuntimeError(
-                        "page pool too small for a single in-flight request")
-                self._preempt(victim)
-                n_preempt += 1
+                    if injected:
+                        # An injected failure must not be fatal to the
+                        # only in-flight request: retry for real.
+                        suppress = True
+                        continue
+                    # Genuinely unrecoverable: even with every other slot
+                    # evicted the pool (page_cap) cannot hold this lane's
+                    # next page. Fail the request, not the engine.
+                    req = sl.request[s]
+                    sl.release(int(s))
+                    self._finish(
+                        req, "failed",
+                        "page pool cannot hold the request's next page "
+                        "even with every other slot evicted (page_cap too "
+                        "small for its decode growth)", done)
+                    n_esc += 1
+                    break
+                if self._preempt_or_fail(victim, done):
+                    n_rec += 1
+                else:
+                    n_esc += 1
                 if victim == s:
                     break
-        return n_preempt
+        return n_rec, n_esc
+
+    # ------------------------------------------------------------------
+    # failure hardening: lifecycle, deadlines, watchdog, audits
+    # ------------------------------------------------------------------
+
+    def _finish(self, req: Request, status: str, reason: Optional[str],
+                done: List[Request]) -> None:
+        """Mark ``req`` (resolving continuations to their origin) with a
+        terminal status, count it, and hand it back via ``done``."""
+        target = getattr(req, "_origin", req)
+        target.status = status
+        target.status_reason = reason
+        self._counts[status] += 1
+        done.append(target)
+
+    def _finish_terminal(self, req: Request, status: str,
+                         reason: str) -> None:
+        """Submit-time terminal outcome (shed / never-admissible reject):
+        the request never enters the queue; it is returned — status set,
+        counted — by the next :meth:`run`."""
+        target = getattr(req, "_origin", req)
+        target.status = status
+        target.status_reason = reason
+        self._counts[status] += 1
+        self._terminal.append(target)
+
+    def _deadline(self, target: Request) -> Optional[int]:
+        ttl = target.ttl_steps if target.ttl_steps is not None \
+            else self.default_ttl
+        if ttl is None:
+            return None
+        return getattr(target, "_submit_clock", 0) + int(ttl)
+
+    def _expire(self, done: List[Request]) -> int:
+        """Expire queued and in-flight requests whose deadline (in
+        virtual-clock ticks since submission) has passed; returns the
+        number expired. Continuations expire on their *origin's* clock —
+        a preempt-requeue cycle never resets a deadline."""
+        def expired(req: Request) -> bool:
+            t = getattr(req, "_origin", req)
+            dl = self._deadline(t)
+            return dl is not None and self._clock > dl
+
+        n = 0
+        for req in self.scheduler.drop_where(expired):
+            self._finish(req, "timed_out",
+                         f"deadline exceeded in queue at clock tick "
+                         f"{self._clock}", done)
+            n += 1
+        for s in np.flatnonzero(self.slots.active):
+            req = self.slots.request[s]
+            if expired(req):
+                self.slots.release(int(s))
+                self._finish(req, "timed_out",
+                             f"deadline exceeded in-flight at clock tick "
+                             f"{self._clock}", done)
+                n += 1
+        return n
+
+    def _preempt_or_fail(self, slot: int, done: List[Request]) -> bool:
+        """Preempt-and-requeue within the request's preemption budget
+        (``Request.max_preemptions``, engine default
+        ``max_preemptions_per_request``; None = unbounded). A request
+        over budget — stuck in an admit→preempt cycle — is escalated to
+        ``status="failed"`` instead of thrashing forever. Returns True
+        when the victim was requeued (recoverable)."""
+        req = self.slots.request[slot]
+        target = getattr(req, "_origin", req)
+        n = getattr(target, "_preempt_count", 0) + 1
+        target._preempt_count = n  # type: ignore[attr-defined]
+        limit = target.max_preemptions \
+            if target.max_preemptions is not None else self.max_preempt
+        if limit is not None and n > limit:
+            self.slots.release(slot)
+            self._finish(
+                target, "failed",
+                f"preemption budget exhausted ({n - 1} preempt-requeue "
+                "cycles; stuck in an admit-preempt cycle)", done)
+            return False
+        self._preempt(slot)
+        return True
+
+    def _watchdog_escalate(self, done: List[Request]) -> None:
+        """No-progress watchdog: after ``watchdog_patience`` consecutive
+        iterations with nothing decoded, admitted, or expired, fail the
+        queue head — whatever is blocking the FIFO — so the run loop is
+        guaranteed to terminate."""
+        if not self.scheduler.queue:
+            return
+        req = self.scheduler.queue.pop(0)
+        self._finish(
+            req, "failed",
+            f"no-progress watchdog: queue head still not admitted after "
+            f"{self.watchdog_patience} consecutive idle iterations", done)
+
+    def _audit_step(self) -> None:
+        """Opt-in per-iteration invariant audit (``Engine(audit=True)``):
+        pool-wide refcount/partition/index conservation, every active
+        lane's block-table bounds against its ``[lo, hi)`` occupancy, and
+        the CoW write-target-is-private postcondition. Runs after page
+        growth and admissions, before the decode step — the moment every
+        write target must be exclusively owned."""
+        sl = self.slots
+        try:
+            active = np.flatnonzero(sl.active)
+            if self.paged:
+                pool = sl.pool
+                pool.check_invariants()
+                for s in active:
+                    pool.check_lane_bounds(int(s), int(sl.lengths[s]))
+                    pool.check_write_private(int(s), int(sl.lengths[s]))
+            for s in active:
+                if not 0 <= int(sl.lengths[s]) < self.cache_len:
+                    raise AuditError(
+                        "slot-length-bounds",
+                        f"slot {int(s)} length {int(sl.lengths[s])} "
+                        f"outside [0, {self.cache_len})")
+        except AuditError:
+            self._audit_violations += 1
+            raise
 
     # ------------------------------------------------------------------
     # prefix sharing: probe + hit-aware page reservation
@@ -498,6 +872,8 @@ class Engine:
         avail = {w: c.available() for w, c in pool.classes.items()}
 
         def reserve(req: Request) -> bool:
+            if self._inj is not None and self._inj.alloc_fail():
+                return False  # injected pool failure: head-block this round
             L = len(req.prompt)
             hit = self._probe_req(req)
             consume = {}
@@ -540,8 +916,10 @@ class Engine:
     # ------------------------------------------------------------------
 
     def _admit(self, free: np.ndarray, cur, emitted, budget,
-               done: List[Request]) -> None:
-        """Prefill one round of admissions into the free slots."""
+               done: List[Request]) -> int:
+        """Prefill one round of admissions into the free slots; returns
+        the number of requests processed (the run loop's progress
+        signal for the no-progress watchdog)."""
         pool = self.slots.pool if self.paged else None
         # Reservation is per width class and one token ahead; assign_many
         # allocates that one-ahead page for real (kv_slots.py), and the run
@@ -558,7 +936,9 @@ class Engine:
             len(free), reserve=self._page_reserve() if pool else None,
             probe=probe_len if self.prefix_share else None)
         fi = 0
+        n_processed = 0
         for adm in groups:
+            n_processed += len(adm.requests)
             logits, caches, slots_of, hit = self._prefill_admission(adm)
             logits = np.asarray(logits)
             assigns = []  # whole group lands in ONE fused lane copy
@@ -572,7 +952,7 @@ class Engine:
                 total = off + length  # lane depth; off > 0 => shared prefix
                 total_budget = min(target.max_new_tokens, self.max_new)
                 if len(target.output) >= total_budget:
-                    done.append(target)  # nothing (left) to generate
+                    self._finish(target, "ok", None, done)  # nothing left
                     continue
                 # Hit accounting covers every suffix prefill — including
                 # requests that finish at prefill below (their prefix
@@ -591,7 +971,8 @@ class Engine:
                     first = int(np.argmax(logits[row, start + length - 1]))
                 target.output.append(first)
                 if len(target.output) >= total_budget or first == self.eos_id:
-                    done.append(target)  # finished at prefill; slot stays free
+                    # finished at prefill; slot stays free
+                    self._finish(target, "ok", None, done)
                     continue
                 slot = int(free[fi])
                 fi += 1
@@ -615,6 +996,7 @@ class Engine:
             # pages hold their final, content-addressable bytes.
             for slot, toks in pubs:
                 pool.publish_prefix(slot, np.asarray(toks, np.int32))
+        return n_processed
 
     def _prefill_admission(self, adm: Admission):
         """Run one prefill sweep; returns (all-position logits, filled

@@ -96,7 +96,8 @@ class SlotKVCache:
     """
 
     def __init__(self, model: Model, num_slots: int, cache_len: int,
-                 page_size: Optional[int] = None, pool_frac: float = 1.0):
+                 page_size: Optional[int] = None, pool_frac: float = 1.0,
+                 page_cap: Optional[int] = None):
         if num_slots <= 0 or cache_len <= 0:
             raise ValueError("num_slots and cache_len must be positive")
         self.num_slots = num_slots
@@ -120,7 +121,7 @@ class SlotKVCache:
         if page_size is not None:
             kv_widths = [w for w in jax.tree.leaves(self.widths) if w > 0]
             self.pool = PagePool(kv_widths, num_slots, page_size,
-                                 pool_frac=pool_frac)
+                                 pool_frac=pool_frac, page_cap=page_cap)
 
             def paged_leaf(leaf, spec, w):
                 if spec != "kv":

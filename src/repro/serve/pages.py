@@ -84,6 +84,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.errors import AuditError
+
 __all__ = ["PagePool", "PageClass", "PrefixHit", "prefix_digests"]
 
 # (width, src_page, dst_page): a device-side page copy the caller owes the
@@ -159,14 +161,23 @@ class PagePool:
     reproduces dense *capacity* (never preempts) while still reporting the
     occupancy-proportional footprint; < 1.0 genuinely shrinks the pool and
     relies on the engine's preempt-and-requeue when it exhausts.
+
+    ``page_cap`` is an absolute per-class hard memory budget: unlike
+    ``pool_frac`` (which is floored at one full lane so a lone max-size
+    request always fits), the cap may drop a class *below* one lane's
+    pages. A request whose lane can then never be allocated is exactly the
+    never-admissible case the engine must reject at submit
+    (``status="rejected"``) instead of head-blocking the queue forever.
     """
 
     def __init__(self, widths: Sequence[int], num_slots: int, page_size: int,
-                 pool_frac: float = 1.0):
+                 pool_frac: float = 1.0, page_cap: Optional[int] = None):
         if page_size <= 0:
             raise ValueError("page_size must be positive")
         if not 0.0 < pool_frac <= 1.0:
             raise ValueError("pool_frac must be in (0, 1]")
+        if page_cap is not None and page_cap <= 0:
+            raise ValueError("page_cap must be positive when set")
         self.num_slots = num_slots
         self.page_size = page_size
         self.classes: Dict[int, PageClass] = {}
@@ -174,6 +185,8 @@ class PagePool:
             lane_pages = -(-w // page_size)
             num_pages = max(lane_pages,
                             int(np.ceil(pool_frac * num_slots * lane_pages)))
+            if page_cap is not None:
+                num_pages = min(num_pages, page_cap)
             self.classes[w] = PageClass(w, num_slots, page_size, num_pages)
         self._dev: Optional[Dict[int, jnp.ndarray]] = None
         # Bumped whenever the prefix index changes (publish/unpublish):
@@ -478,27 +491,118 @@ class PagePool:
                          for w, c in self.classes.items()}
         return self._dev
 
-    # -- invariants (tests) --------------------------------------------
+    # -- invariants (audit mode + tests) --------------------------------
 
     def check_invariants(self) -> None:
         """Refcounts equal block-table reference counts, free/retained/
-        mapped partition the pool, and the prefix index is a bijection."""
+        mapped partition the pool, and the prefix index is a bijection.
+
+        Raises a structured :class:`~repro.core.errors.AuditError` naming
+        the failing check — the production assertion behind
+        ``Engine(audit=True)`` as well as the allocator property tests."""
         for c in self.classes.values():
-            assert c.table[self.num_slots].tolist() == [c.FREE] * c.lane_pages
+            if c.table[self.num_slots].tolist() != [c.FREE] * c.lane_pages:
+                raise AuditError(
+                    "sentinel-row", f"width={c.width}: sentinel block-table "
+                    "row no longer all-FREE")
             mapped = c.table[:self.num_slots][
                 c.table[:self.num_slots] != c.FREE]
             refs = Counter(mapped.tolist())
             for pg in range(c.num_pages):
-                assert c.refcount[pg] == refs.get(pg, 0), \
-                    f"refcount drift on page {pg}"
-            assert len(set(c.free)) == len(c.free), "free list duplicated"
-            assert not (set(c.free) & set(refs)), "free page still mapped"
-            assert not (set(c.free) & set(c.retained)), "retained and free"
-            assert not (set(c.retained) & set(refs)), "retained page mapped"
+                if c.refcount[pg] != refs.get(pg, 0):
+                    raise AuditError(
+                        "refcount-drift",
+                        f"width={c.width} page {pg}: refcount "
+                        f"{int(c.refcount[pg])} != {refs.get(pg, 0)} "
+                        "block-table references")
+            if len(set(c.free)) != len(c.free):
+                raise AuditError("free-dup",
+                                 f"width={c.width}: free list duplicated")
+            if set(c.free) & set(refs):
+                raise AuditError(
+                    "free-mapped", f"width={c.width}: pages "
+                    f"{sorted(set(c.free) & set(refs))} free AND mapped")
+            if set(c.free) & set(c.retained):
+                raise AuditError(
+                    "retained-free", f"width={c.width}: pages "
+                    f"{sorted(set(c.free) & set(c.retained))} retained AND "
+                    "free")
+            if set(c.retained) & set(refs):
+                raise AuditError(
+                    "retained-mapped", f"width={c.width}: pages "
+                    f"{sorted(set(c.retained) & set(refs))} retained AND "
+                    "mapped")
             for pg in c.retained:
-                assert pg in c.published, "retained page not published"
-            assert len(c.free) + len(c.retained) + len(refs) == c.num_pages, \
-                "pages leaked"
-            assert len(c.index) == len(c.published), "prefix index drift"
+                if pg not in c.published:
+                    raise AuditError(
+                        "retained-unpublished",
+                        f"width={c.width} page {pg}: retained but not in "
+                        "the prefix index")
+            if len(c.free) + len(c.retained) + len(refs) != c.num_pages:
+                raise AuditError(
+                    "page-leak", f"width={c.width}: free {len(c.free)} + "
+                    f"retained {len(c.retained)} + mapped {len(refs)} != "
+                    f"{c.num_pages} pool pages")
+            if len(c.index) != len(c.published):
+                raise AuditError("index-drift",
+                                 f"width={c.width}: prefix index size "
+                                 f"{len(c.index)} != published "
+                                 f"{len(c.published)}")
             for key, pg in c.index.items():
-                assert c.published.get(pg) == key, "prefix index not bijective"
+                if c.published.get(pg) != key:
+                    raise AuditError(
+                        "index-bijection", f"width={c.width} page {pg}: "
+                        "prefix index and published map disagree")
+
+    def check_lane_bounds(self, slot: int, length: int) -> None:
+        """Audit one active slot's block tables against its ``[lo, hi)``
+        occupancy: allocated entries must form a logical prefix of the
+        lane, in-range, and cover every position up to ``length`` plus
+        this step's write (clamped to each ring width)."""
+        ps = self.page_size
+        for c in self.classes.values():
+            held = c.table[slot]
+            k = 0
+            while k < c.lane_pages and held[k] != c.FREE:
+                k += 1
+            trailing = held[k:]
+            if not (trailing == c.FREE).all():
+                raise AuditError(
+                    "lane-prefix", f"slot {slot} width={c.width}: allocated "
+                    "pages are not a logical prefix of the lane: "
+                    f"{held.tolist()}")
+            live = held[:k]
+            if ((live < 0) | (live >= c.num_pages)).any():
+                raise AuditError(
+                    "table-range", f"slot {slot} width={c.width}: physical "
+                    f"page id out of range: {live.tolist()}")
+            need = -(-min(length + 1, c.width) // ps)
+            if k < need:
+                raise AuditError(
+                    "lane-bounds", f"slot {slot} width={c.width}: occupancy "
+                    f"[0, {length}) + next write needs {need} pages, lane "
+                    f"holds {k}")
+
+    def check_write_private(self, slot: int, length: int) -> None:
+        """Audit the CoW postcondition for one active slot: the page its
+        next decode write (position ``length``, mod each ring width) lands
+        in must be mapped, exclusively owned (refcount 1), and absent from
+        the prefix index — a shared or published page is never written in
+        place."""
+        for c in self.classes.values():
+            lp = (length % c.width) // self.page_size
+            pg = int(c.table[slot, lp])
+            if pg == c.FREE:
+                raise AuditError(
+                    "write-unmapped", f"slot {slot} width={c.width}: write "
+                    f"position {length} lands on unallocated logical page "
+                    f"{lp}")
+            if c.refcount[pg] != 1:
+                raise AuditError(
+                    "cow-write-shared", f"slot {slot} width={c.width}: "
+                    f"write-target page {pg} has refcount "
+                    f"{int(c.refcount[pg])} (must be exclusively owned)")
+            if pg in c.published:
+                raise AuditError(
+                    "cow-write-published", f"slot {slot} width={c.width}: "
+                    f"write-target page {pg} is still in the prefix index")

@@ -25,7 +25,7 @@ is now an alias of this class).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -36,7 +36,18 @@ from repro.core.packing import (
     pack_requests,
 )
 
-__all__ = ["Request", "Admission", "Scheduler", "DynamicBatcher"]
+__all__ = ["Request", "Admission", "Scheduler", "DynamicBatcher",
+           "TERMINAL_STATUSES"]
+
+# Every request the engine returns carries exactly one of these in
+# ``status`` (docs/serving.md, "Serving failure model"):
+#   ok        — completed normally (budget reached or eos)
+#   rejected  — never admissible (page/cache capacity); refused at submit
+#   shed      — dropped by load-shedding (bounded pending queue)
+#   timed_out — deadline (ttl_steps) expired while queued or in a slot
+#   failed    — quarantined at runtime (non-finite logits, preemption
+#               budget exhausted, watchdog escalation, unrecoverable growth)
+TERMINAL_STATUSES = ("ok", "rejected", "shed", "timed_out", "failed")
 
 
 @dataclasses.dataclass
@@ -48,8 +59,19 @@ class Request:
     # a per-request seed from the engine's base seed and the rid, so two
     # requests never share a stream by accident.
     seed: Optional[int] = None
+    # Deadline in engine virtual-clock ticks (one tick per run-loop
+    # iteration, plus injected stall ticks) counted from submission; None
+    # defers to the engine's default_ttl_steps (None there too = no
+    # deadline). Deterministic by construction — no wall clock involved.
+    ttl_steps: Optional[int] = None
+    # How many preempt-and-requeue cycles this request may survive before
+    # the engine escalates it to status="failed"; None defers to the
+    # engine's max_preemptions_per_request (None = unbounded).
+    max_preemptions: Optional[int] = None
     # filled by the engine:
     output: Optional[List[int]] = None
+    status: Optional[str] = None         # one of TERMINAL_STATUSES when done
+    status_reason: Optional[str] = None  # human-readable cause for non-ok
 
     def __post_init__(self):
         if self.output is None:
@@ -141,6 +163,18 @@ class Scheduler:
         check: a resumed prompt carries its generated tokens, and the
         original admission already proved the total fits a cache lane."""
         self.queue.insert(0, req)
+
+    def drop_where(self, pred: Callable[[Request], bool]) -> List[Request]:
+        """Remove and return every queued request matching ``pred``
+        (queue order preserved for both kept and dropped). The engine's
+        deadline sweep uses this to expire queued requests without
+        disturbing FIFO order for the rest."""
+        kept: List[Request] = []
+        dropped: List[Request] = []
+        for r in self.queue:
+            (dropped if pred(r) else kept).append(r)
+        self.queue = kept
+        return dropped
 
     def next_admissions(self, free_slots: int, reserve=None,
                         probe=None) -> List[Admission]:

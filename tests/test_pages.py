@@ -108,6 +108,66 @@ def test_page_pool_invariants_under_random_schedule(seed):
     assert pool.free_page_budget() == pool.total_pages
 
 
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_pool_exhaustion_recovery(seed):
+    """Drive the pool to ZERO free pages, hammer it with grow/admit
+    attempts while dry, then tear everything down: no call may deadlock
+    or corrupt the allocator (``check_invariants`` between every
+    operation), dry refusals must allocate nothing, and a full release
+    returns ``memory_ratio()`` exactly to its empty-pool baseline."""
+    rng = np.random.default_rng(seed)
+    # One width class: lane growth is page-by-page in lockstep across
+    # classes, so a multi-class pool can strand free pages behind the
+    # first class to go dry — with one class, six full-width lanes always
+    # cover the (pool_frac-scaled) capacity and true exhaustion is
+    # reachable from any schedule.
+    pool = PagePool([48], num_slots=6, page_size=16,
+                    pool_frac=float(rng.uniform(0.3, 0.7)))
+    baseline = pool.memory_ratio()
+    assert baseline == 0.0
+    # fill to the brim: interleave fresh-lane admissions and one-write
+    # growth. Growth past a lane's max width (48) wraps rings onto
+    # resident pages and consumes nothing, so it is bounded there.
+    held = {}
+    changed = True
+    while pool.free_page_budget() > 0 and changed:
+        changed = False
+        for s in range(6):
+            if s not in held and pool.can_alloc(1):
+                pool.alloc_prefix(s, int(rng.integers(1, 17)))
+                held[s] = 16
+                changed = True
+            elif s in held and held[s] < 48 \
+                    and pool.ensure_write(s, held[s]):
+                held[s] += 1
+                changed = True
+            pool.check_invariants()
+    assert pool.free_page_budget() == 0, "pool never actually exhausted"
+    assert pool.memory_ratio() == 1.0
+    # dry pool: refusals must be clean (nothing allocated, nothing leaked)
+    free_slots = [s for s in range(6) if s not in held]
+    used = pool.pages_in_use()
+    for _ in range(10):
+        s = int(rng.choice(list(held)))
+        # a grow can still succeed while dry if the write wraps a ring
+        # lane onto a resident page; a refusal must be side-effect free
+        if pool.ensure_write(s, held[s]):
+            held[s] += 1
+        if free_slots:
+            assert not pool.ensure_write(free_slots[0], 0)
+        assert not pool.can_alloc(1)
+        assert pool.pages_in_use() == used
+        pool.check_invariants()
+    # recovery: release in random order; the baseline footprint returns
+    for s in rng.permutation(list(held)):
+        pool.release(int(s))
+        pool.check_invariants()
+    assert pool.pages_in_use() == 0
+    assert pool.free_page_budget() == pool.total_pages
+    assert pool.memory_ratio() == baseline
+
+
 # ---------------------------------------------------------------------------
 # paged engine == contiguous engine, per cache kind
 # ---------------------------------------------------------------------------

@@ -21,6 +21,16 @@ the offending key named:
     bytes per decoded token than the dense-factorized leaves.
   * ``compressed.decoded_tokens`` == ``compressed.decoded_tokens_dense``
     — the bytes comparison is at equal tokens on the same workload.
+  * ``degraded.tokens_per_s`` >= ``degraded.tokens_per_s_clean / 4`` —
+    serving under the seeded fault plan (NaN quarantines, forced
+    preemptions) stays within a fixed factor of clean paged throughput
+    instead of collapsing.
+  * ``degraded.faults_injected_total`` > 0 and ``degraded.failed`` > 0 —
+    the chaos row actually injected faults and the quarantine counted
+    them as terminal failures (a zero means the harness silently
+    stopped firing).
+  * ``degraded.completed_ok + degraded.failed`` == ``degraded.n_requests``
+    — every request landed in a terminal status; none leaked.
 * ``BENCH_decode_attn.json``
   * ``kv_block_ratio`` < 0.7 — the TDA kernel's predicated grid visits
     blocks in proportion to occupancy, not capacity.
@@ -63,9 +73,30 @@ GATES = [
      lambda v, rec: v == rec["compressed"]["decoded_tokens_dense"],
      "== compressed.decoded_tokens_dense (bytes compared at equal tokens "
      "on the same workload)"),
+    ("BENCH_decode.json", "degraded.tokens_per_s",
+     lambda v, rec: v >= rec["degraded"]["tokens_per_s_clean"] / 4.0,
+     ">= degraded.tokens_per_s_clean / 4 (fault-injected serving keeps a "
+     "bounded fraction of clean throughput)"),
+    ("BENCH_decode.json", "degraded.faults_injected_total",
+     lambda v, rec: v > 0, "> 0 (the chaos row must actually inject)"),
+    ("BENCH_decode.json", "degraded.failed",
+     lambda v, rec: v > 0, "> 0 (injected NaNs must land as counted "
+     "terminal failures)"),
+    ("BENCH_decode.json", "degraded.completed_ok",
+     lambda v, rec: v + rec["degraded"]["failed"]
+     == rec["degraded"]["n_requests"],
+     "ok + failed == n_requests (every request reaches a terminal "
+     "status; none leaked)"),
     ("BENCH_decode_attn.json", "kv_block_ratio",
      lambda v, rec: v < 0.7, "< 0.7 (predicated TDA grid vs dense sweep)"),
 ]
+
+
+def regen_cmd(fname: str) -> str:
+    """The exact command that regenerates a sidecar, derived from its
+    name — failure messages must tell the reader how to fix them."""
+    table = fname[len("BENCH_"):-len(".json")]
+    return f"python -m benchmarks.run {table}"
 
 
 def lookup(rec: dict, dotted: str):
@@ -89,8 +120,8 @@ def main() -> int:
         path = root / fname
         if fname not in records:
             if not path.exists():
-                failures.append(f"{fname}: missing (run `python -m "
-                                "benchmarks.run decode decode_attn` first)")
+                failures.append(f"{fname}: missing (run "
+                                f"`{regen_cmd(fname)}` first)")
                 records[fname] = None
                 continue
             records[fname] = json.loads(path.read_text())
@@ -100,7 +131,10 @@ def main() -> int:
         try:
             val = lookup(rec, key)
         except KeyError:
-            failures.append(f"{fname}: key `{key}` missing (required {want})")
+            failures.append(
+                f"{fname}: key `{key}` missing (required {want}; the "
+                f"sidecar is stale — regenerate it with "
+                f"`{regen_cmd(fname)}`)")
             continue
         try:
             ok = pred(val, rec)

@@ -56,6 +56,15 @@ REQUIRED_ANCHORS = [
     ("serving.md", "weight_format"),
     ("serving.md", "bytes_per_token"),
     ("serving.md", "decode/compressed"),
+    # serving failure model contract: terminal statuses, chaos harness,
+    # audit mode, the degraded gate, and the refused deployment
+    ("serving.md", "Serving failure model"),
+    ("serving.md", "FaultPlan"),
+    ("serving.md", "timed_out"),
+    ("serving.md", "REPRO_SERVE_AUDIT"),
+    ("serving.md", "AuditError"),
+    ("serving.md", "decode/degraded"),
+    ("serving.md", "UnsupportedConfigError"),
 ]
 
 PATH_RE = re.compile(
