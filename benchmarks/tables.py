@@ -5,6 +5,11 @@ measured microseconds on this host (CPU).
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import textwrap
 import time
 from typing import List, Tuple
 
@@ -447,6 +452,81 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
     dg = deng.decode_stats
     dg_tokens = sum(len(r.output) for r in deg_done)
 
+    # ---- sharded (tensor-parallel) decode: the same slot engine over a
+    # forced 4-device host mesh (KV-head-sharded caches + partial-softmax
+    # merge, serve/engine.py + kernels/tda/sharded.py). Runs in a
+    # subprocess because the device count is fixed at backend init and
+    # this bench process must keep 1 device. float32 so greedy token
+    # identity is deterministic (bf16 near-tie argmax noise is not a
+    # sharding property). Gated: tokens identical to the single-device
+    # run at equal counts, and per-rank KV traffic == kv_bytes_per_token
+    # / tp_ranks — each rank streams only its head-slice of every page.
+    sub = textwrap.dedent("""
+        import os
+        flag = "--xla_force_host_platform_device_count=4"
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") + " " + flag).strip()
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import json, time
+        import jax
+        assert len(jax.devices()) == 4, jax.devices()
+        import numpy as np
+        from repro.configs import get_config
+        from repro.launch.mesh import make_local_mesh
+        from repro.models.transformer import Model
+        from repro.serve import Engine, Request
+
+        cfg = get_config("qwen1.5-4b", "smoke", dtype="float32")
+        m = Model(cfg)
+        params = m.init(jax.random.key(0))
+        rng = np.random.default_rng(0)
+        spec = [(int(rng.integers(4, 13)), int(rng.integers(3, 9)))
+                for _ in range(8)]
+
+        def workload():
+            r2 = np.random.default_rng(1)
+            return [Request(rid=i, prompt=r2.integers(
+                        0, cfg.vocab_size, size=L).astype(np.int32),
+                        max_new_tokens=b)
+                    for i, (L, b) in enumerate(spec)]
+
+        def run(mesh):
+            eng = Engine(m, params, max_len=16, max_new_tokens=8,
+                         num_slots=4, mesh=mesh)
+            for r in workload():
+                eng.submit(r)
+            eng.run()  # compile
+            t0 = time.perf_counter()
+            for r in workload():
+                eng.submit(r)
+            done = eng.run()
+            secs = time.perf_counter() - t0
+            return secs, {d.rid: tuple(d.output) for d in done}, \\
+                eng.decode_stats
+
+        s1, t1, d1 = run(None)
+        sN, tN, dN = run(make_local_mesh(1, 4))
+        print(json.dumps({
+            "tokens_match": t1 == tN,
+            "decoded_tokens": dN["decoded_tokens"],
+            "decoded_tokens_single": d1["decoded_tokens"],
+            "tp_ranks": dN["tp_ranks"],
+            "tokens_per_s": dN["decoded_tokens"] / sN,
+            "tokens_per_s_single": d1["decoded_tokens"] / s1,
+            "kv_bytes_per_token": dN["kv_bytes_per_token"],
+            "kv_bytes_per_token_per_rank":
+                dN["kv_bytes_per_token_per_rank"]}))
+    """)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # the child sets its own, before jax init
+    env.setdefault("PYTHONPATH", "src")
+    out = subprocess.run([sys.executable, "-c", sub], capture_output=True,
+                         text=True, timeout=900, env=env)
+    if out.returncode != 0:
+        raise RuntimeError("sharded decode bench subprocess failed:\n"
+                           + out.stderr[-3000:])
+    shr = json.loads(out.stdout.strip().splitlines()[-1])
+
     ARTIFACTS["decode"] = {
         "tokens_per_s": useful / ct_s,
         "tokens_per_s_lockstep": useful / ls_s,
@@ -507,6 +587,11 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
             "preemptions_recovered": dg["preemptions_recovered"],
             "audit_violations": dg["audit_violations"],
         },
+        # tracked sharded-decode gates (tools/check_bench.py): the 4-rank
+        # engine must emit the single-device token streams verbatim at
+        # equal counts, and per-rank KV traffic must be exactly
+        # kv_bytes_per_token / tp_ranks.
+        "sharded": shr,
     }
     return [
         ("decode/lockstep", ls_s * 1e6,
@@ -540,6 +625,13 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
          f"(gate >=1/4) ok={dg['completed_ok']} failed={dg['failed']} "
          f"faults={sum(dg['faults_injected'].values())} "
          f"recovered_preempts={dg['preemptions_recovered']}"),
+        ("decode/sharded", 0.0,
+         f"tp={shr['tp_ranks']} tok/s={shr['tokens_per_s']:.0f} vs "
+         f"1-device {shr['tokens_per_s_single']:.0f} "
+         f"tokens_match={shr['tokens_match']} "
+         f"kv_bytes/tok/rank={shr['kv_bytes_per_token_per_rank']:.0f} "
+         f"(= 1/{shr['tp_ranks']} of {shr['kv_bytes_per_token']:.0f}; "
+         f"KV-head-sharded pages)"),
         ("decode/compressed", cm_s * 1e6,
          f"bytes/tok={cm['bytes_per_token']:.0f} vs dense "
          f"{fd['bytes_per_token']:.0f} "

@@ -43,3 +43,5 @@ backend-aware default (``kernels/common.py``) compiles it.
 """
 from repro.kernels.tda.ops import block_stats, fused_decode_attention  # noqa: F401
 from repro.kernels.tda.ref import decode_attention_reference  # noqa: F401
+from repro.kernels.tda.sharded import (  # noqa: F401
+    decode_partials, merge_partials, sharded_decode_attention)

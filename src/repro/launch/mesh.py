@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 
 __all__ = ["compat_make_mesh", "make_production_mesh", "make_local_mesh",
-           "devices_per_pod"]
+           "devices_per_pod", "tensor_parallel_size"]
 
 
 def compat_make_mesh(shape, axes) -> jax.sharding.Mesh:
@@ -36,6 +36,16 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over however many (host) devices exist — tests/examples."""
     return compat_make_mesh((data, model), ("data", "model"))
+
+
+def tensor_parallel_size(mesh) -> int:
+    """Size of the ``model`` (TP) axis; 1 for ``mesh=None`` or meshes
+    without one. THE predicate for the serving stack's sharded-decode
+    dispatch (engine KV placement, decode_attention's partial-merge path):
+    a 1-device mesh and no mesh are the same single-rank program."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return int(mesh.shape["model"])
 
 
 def devices_per_pod(mesh: jax.sharding.Mesh) -> int:

@@ -327,6 +327,7 @@ def decode_attention(
     impl: str = "dense",
     block_k: int = 128,
     block_table: Optional[jnp.ndarray] = None,  # (B, n) paged lane pool
+    mesh=None,  # tensor-parallel mesh: dispatch to the sharded merge path
 ) -> jnp.ndarray:
     """Single-token attention against a (possibly ring-buffered) KV cache.
 
@@ -349,7 +350,25 @@ def decode_attention(
     holding logical kv block ``i`` of slot ``b`` (one page = one kv
     block); the kernel reads it by scalar prefetch. Bounds semantics are
     unchanged.
+
+    ``mesh`` with a >1 ``model`` axis dispatches to the tensor-parallel
+    form (:mod:`repro.kernels.tda.sharded`): caches sharded on the KV-head
+    axis, per-rank online-softmax partials merged by one cross-rank
+    rescale/psum. Paged pools are gathered to lane views first (the
+    gather is shard-local — page and position axes are replicated).
     """
+    from repro.launch.mesh import tensor_parallel_size
+    if tensor_parallel_size(mesh) > 1:
+        from repro.kernels.tda.sharded import sharded_decode_attention
+        if block_table is not None:
+            k_cache = gather_paged_lanes(k_cache, block_table)
+            v_cache = gather_paged_lanes(v_cache, block_table)
+            if k_scale is not None:
+                k_scale = gather_paged_lanes(k_scale, block_table)
+                v_scale = gather_paged_lanes(v_scale, block_table)
+        return sharded_decode_attention(
+            q, k_cache, v_cache, cache_index, mesh=mesh, window=window,
+            k_scale=k_scale, v_scale=v_scale)
     if impl == "tda":
         return fused_decode_attention(
             q, k_cache, v_cache, cache_index, k_scale=k_scale,
@@ -523,7 +542,7 @@ def attention_block(
             o = decode_attention(
                 q, layer_view(new_cache["k"]), layer_view(new_cache["v"]),
                 hi, k_scale=kcs, v_scale=vcs, impl="tda",
-                block_k=cfg.decode_block_k, block_table=bt)
+                block_k=cfg.decode_block_k, block_table=bt, mesh=mesh)
         else:
             # Dense path: gather each slot's lane view out of the pool
             # (same data volume as reading a dense lane), then attend.
@@ -537,7 +556,7 @@ def attention_block(
                                    lanes(new_cache["v_scale"]), dt)
             else:
                 kc, vc = lanes(new_cache["k"]), lanes(new_cache["v"])
-            o = decode_attention(q, kc, vc, hi, impl="dense")
+            o = decode_attention(q, kc, vc, hi, impl="dense", mesh=mesh)
         o = o.reshape(B, S, cfg.n_heads * hd)
     elif cache is not None and S == 1:
         # Decode: write this step's K/V at cache_index (ring for windowed).
@@ -599,12 +618,13 @@ def attention_block(
         if window is None:
             o = decode_attention(q, kc, vc, cache_index + 1,
                                  k_scale=kcs, v_scale=vcs, impl=impl,
-                                 block_k=cfg.decode_block_k)
+                                 block_k=cfg.decode_block_k, mesh=mesh)
         else:
             # Ring buffer: all slots < min(cache_index+1, ring) are valid.
             o = decode_attention(q, kc, vc, jnp.minimum(cache_index + 1, ring),
                                  window=None, k_scale=kcs, v_scale=vcs,
-                                 impl=impl, block_k=cfg.decode_block_k)
+                                 impl=impl, block_k=cfg.decode_block_k,
+                                 mesh=mesh)
         o = o.reshape(B, S, cfg.n_heads * hd)
     else:
         if cache is not None:  # prefill writing the cache

@@ -124,6 +124,8 @@ from repro.core.factorized import params_stream_bits
 from repro.core.packing import chunk_prompt
 from repro.kernels.common import resolve_decode_attn
 from repro.kernels.tda.ref import block_stats
+from repro.launch import sharding as shd
+from repro.launch.mesh import tensor_parallel_size
 from repro.models.transformer import Model
 from repro.serve.faults import FaultInjector, FaultPlan
 from repro.serve.kv_slots import SlotKVCache
@@ -173,8 +175,33 @@ class Engine:
                 "streaming format. Either serve without a mesh (mesh=None "
                 "or a 1-device mesh), or serve dense-factorized params "
                 "(skip Model.compress_params) on the mesh.")
+        # Tensor-parallel decode shards the KV-head axis (each rank owns
+        # its heads' pages; kernels/tda/sharded.py merges the per-rank
+        # softmax partials), so the head counts must split evenly — a GQA
+        # config whose kv_heads don't divide the mesh is refused at
+        # construction with the actionable numbers, not at trace time.
+        self._tp = tensor_parallel_size(mesh)
+        if self._tp > 1 and (model.cfg.kv_heads % self._tp
+                             or model.cfg.n_heads % self._tp):
+            raise UnsupportedConfigError(
+                f"cannot shard decode over a {self._tp}-way 'model' mesh "
+                f"axis: kv_heads={model.cfg.kv_heads} / "
+                f"n_heads={model.cfg.n_heads} must both be divisible by "
+                "the tensor-parallel size (KV-head sharding gives each "
+                "rank a whole number of heads). Use a mesh whose 'model' "
+                "axis divides the head counts, or serve unsharded.")
         self.model = model
         self.params = params
+        # Column/row-parallel weight placement (launch/sharding.py): dense
+        # 'w' and factorized 'wd' leaves split across ranks; compressed
+        # weight streams (wd_first/wd_deltas/wd_vq/...) fall through the
+        # spec rules to replication — the bit-exact fallback that lets
+        # non-MoE compressed models serve on a mesh (the old blanket
+        # refusal is retired; only compressed *MoE experts* remain
+        # unsupported, above).
+        if self._tp > 1 and params is not None:
+            pspecs = shd.param_specs(jax.eval_shape(lambda: params), mesh)
+            self.params = jax.device_put(params, shd.named(pspecs, mesh))
         self.max_len = max_len
         self.max_new = max_new_tokens
         self.mesh = mesh
@@ -218,7 +245,8 @@ class Engine:
         self.slots = SlotKVCache(model, num_slots, self.cache_len,
                                  page_size=self.page_size,
                                  pool_frac=pool_frac,
-                                 page_cap=page_cap if self.paged else None)
+                                 page_cap=page_cap if self.paged else None,
+                                 mesh=mesh)
         # Page-level prefix sharing: only meaningful for paged stacks whose
         # cache is *entirely* per-token kv lanes — a recurrent layer would
         # need its end-of-prefix state, which is neither paged nor
@@ -619,6 +647,13 @@ class Engine:
             "weight_bytes_per_token": (steps * self._weight_stream_bits / 8.0
                                        / max(decoded_tokens, 1)),
             "kv_bytes_per_token": kv_bytes / max(decoded_tokens, 1),
+            # Tensor-parallel decode: each rank streams only its
+            # kv_heads / tp_ranks head-slice of every visited page, so
+            # per-rank KV traffic scales ~1/N with the mesh (gated by
+            # tools/check_bench.py via the decode/sharded row).
+            "tp_ranks": self._tp,
+            "kv_bytes_per_token_per_rank": (
+                kv_bytes / max(decoded_tokens, 1) / self._tp),
             "bytes_per_token": ((steps * self._weight_stream_bits / 8.0
                                  + kv_bytes) / max(decoded_tokens, 1)),
             # Failure-model counters (docs/serving.md): terminal statuses
@@ -814,7 +849,7 @@ class Engine:
             active = np.flatnonzero(sl.active)
             if self.paged:
                 pool = sl.pool
-                pool.check_invariants()
+                pool.check_invariants(ranks=self._tp)
                 for s in active:
                     pool.check_lane_bounds(int(s), int(sl.lengths[s]))
                     pool.check_write_private(int(s), int(sl.lengths[s]))

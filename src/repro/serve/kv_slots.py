@@ -97,9 +97,10 @@ class SlotKVCache:
 
     def __init__(self, model: Model, num_slots: int, cache_len: int,
                  page_size: Optional[int] = None, pool_frac: float = 1.0,
-                 page_cap: Optional[int] = None):
+                 page_cap: Optional[int] = None, mesh=None):
         if num_slots <= 0 or cache_len <= 0:
             raise ValueError("num_slots and cache_len must be positive")
+        self.mesh = mesh
         self.num_slots = num_slots
         self.cache_len = cache_len
         self.page_size = page_size
@@ -135,6 +136,21 @@ class SlotKVCache:
                                        self.widths)
         else:
             self.caches = model.init_cache(num_slots, cache_len)
+        # Tensor-parallel placement: kv leaves (pool pages or contiguous
+        # lanes) are KV-head-sharded over the mesh's ``model`` axis — each
+        # rank owns its heads' slice of every page — while block tables
+        # and all host-side slot metadata stay replicated. Placing the
+        # leaves here (not in the engine) means every downstream jit (the
+        # fused assign copy, CoW page copiers, the decode step) sees
+        # committed shardings and keeps them, so the cache never
+        # materializes unsharded on one device.
+        from repro.launch.mesh import tensor_parallel_size
+        if tensor_parallel_size(mesh) > 1:
+            from repro.launch import sharding as shd
+            specs = shd.slot_cache_specs(
+                jax.eval_shape(lambda: self.caches), mesh)
+            self.caches = jax.device_put(self.caches,
+                                         shd.named(specs, mesh))
         # host-side slot metadata
         self.active = np.zeros(num_slots, bool)
         self.lengths = np.zeros(num_slots, np.int32)

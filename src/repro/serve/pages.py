@@ -493,13 +493,33 @@ class PagePool:
 
     # -- invariants (audit mode + tests) --------------------------------
 
-    def check_invariants(self) -> None:
+    def check_invariants(self, ranks: int = 1) -> None:
         """Refcounts equal block-table reference counts, free/retained/
         mapped partition the pool, and the prefix index is a bijection.
 
         Raises a structured :class:`~repro.core.errors.AuditError` naming
         the failing check — the production assertion behind
-        ``Engine(audit=True)`` as well as the allocator property tests."""
+        ``Engine(audit=True)`` as well as the allocator property tests.
+
+        ``ranks > 1`` audits the **per-rank views** of a KV-head-sharded
+        deployment (docs/serving.md, "Sharded decode"): every rank holds
+        its head-slice of the *same* physical pages, addressed through the
+        *same* block tables — page ownership is replicated metadata over
+        partitioned bytes. The audit therefore verifies each rank's view
+        independently (any drift between what rank r would free/map and
+        the global table is a refcount-conservation bug on that rank) and
+        that the page budget conserves across ranks: N head-slices of one
+        page are one allocation, never N."""
+        for rank in range(max(int(ranks), 1)):
+            try:
+                self._check_view()
+            except AuditError as e:
+                if ranks > 1:
+                    raise AuditError(
+                        e.check, f"{e.detail} [rank {rank}/{ranks} view]")
+                raise
+
+    def _check_view(self) -> None:
         for c in self.classes.values():
             if c.table[self.num_slots].tolist() != [c.FREE] * c.lane_pages:
                 raise AuditError(

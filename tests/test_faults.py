@@ -438,9 +438,14 @@ def test_audit_mode_is_transparent_on_a_healthy_run(fm):
 
 
 class _StubMesh:
-    """Duck-typed mesh: the construction check and moe_ffn's early raise
-    only ever read ``mesh.devices.size`` (tests/conftest.py forbids the
-    global XLA_FLAGS a real multi-device CPU mesh would need)."""
+    """Duck-typed mesh: the construction checks read ``mesh.devices.size``
+    (the compressed-MoE refusal keys on physical device count) and
+    ``mesh.axis_names`` (the tensor-parallel dispatch predicate). No
+    ``model`` axis, so ``tensor_parallel_size`` stays 1 and the sharded
+    placement path is off — real multi-device meshes are exercised in
+    subprocesses via the ``mesh_cpu`` fixture."""
+
+    axis_names = ("data",)
 
     class devices:
         size = 2

@@ -1,0 +1,206 @@
+"""Distributed-softmax unit tests for the sharded TDA decode path
+(`src/repro/kernels/tda/sharded.py`): per-rank online-softmax partials
+merged across ranks must equal the single-rank dense reference.
+
+These run in-process on 1 device — `decode_partials` / `merge_partials`
+are pure math, so "ranks" are simulated by slicing the key sequence (or
+the head axis) and stacking the partials on a leading rank axis. That
+covers the cases a real mesh makes expensive to construct on purpose:
+
+* non-tile-multiple lengths (a rank's range is partially occupied),
+* masked slots (``lengths == 0`` rows stay all-zero through the merge),
+* int8 KV codes + per-(token, head) scales,
+* **one rank with zero visited blocks** — the empty-partial rescale is
+  the classic flash-decode bug; with the ``(0, NEG_INF, 0)`` convention
+  it must contribute a structural zero, never a NaN,
+* every rank empty (never-attended slot) — output is exactly zero.
+
+The end-to-end placement (shard_map over a real mesh) is pinned by
+`tests/test_sharded_serving.py`; this file pins the math contract.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.tda.ref import decode_attention_reference
+from repro.kernels.tda.sharded import (
+    NEG_INF,
+    decode_partials,
+    merge_partials,
+)
+from repro.models import layers as L
+
+B, S, HQ, HKV, D = 4, 32, 8, 4, 16
+
+
+def _qkv(rng, hq=HQ, hkv=HKV, s=S):
+    q = jnp.asarray(rng.normal(size=(B, hq, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, s, hkv, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, s, hkv, D)).astype(np.float32))
+    return q, k, v
+
+
+def _seq_split_merge(q, k, v, lengths, ranks, *, window=None,
+                     k_scale=None, v_scale=None):
+    """Simulate a sequence-split deployment: rank r owns the contiguous
+    key range ``[r * S/ranks, (r+1) * S/ranks)``; stack partials and
+    merge. Ranks whose range lies entirely past a row's length produce
+    the empty partial — exactly the case the merge must survive."""
+    s = k.shape[1]
+    assert s % ranks == 0
+    chunk = s // ranks
+    accs, ms, ls = [], [], []
+    for r in range(ranks):
+        sl = slice(r * chunk, (r + 1) * chunk)
+        acc, m, l = decode_partials(
+            q, k[:, sl], v[:, sl], lengths,
+            k_scale=None if k_scale is None else k_scale[:, sl],
+            v_scale=None if v_scale is None else v_scale[:, sl],
+            window=window, pos_offset=r * chunk)
+        accs.append(acc)
+        ms.append(m)
+        ls.append(l)
+    return merge_partials(jnp.stack(accs), jnp.stack(ms), jnp.stack(ls))
+
+
+def test_single_rank_merge_is_reference(rng):
+    """ranks=1 closes the loop: partials + merge == dense reference."""
+    q, k, v = _qkv(rng)
+    lengths = jnp.asarray([S, S // 2, 7, 1], jnp.int32)
+    out = _seq_split_merge(q, k, v, lengths, ranks=1)
+    ref = decode_attention_reference(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("ranks", [2, 4])
+def test_sequence_split_non_tile_multiple_lengths(rng, ranks):
+    """Ranks own disjoint key ranges; lengths deliberately avoid every
+    tile boundary (7, 13, ...) so some rank is partially occupied."""
+    q, k, v = _qkv(rng)
+    lengths = jnp.asarray([7, 13, 29, 32], jnp.int32)
+    out = _seq_split_merge(q, k, v, lengths, ranks=ranks)
+    ref = decode_attention_reference(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_empty_rank_contributes_structural_zero(rng):
+    """lengths=5 with 4 ranks of 8 keys: ranks 1-3 visit zero valid
+    positions. Their partials must be exactly (0, NEG_INF, 0) and the
+    merged output must match the reference with no NaN anywhere."""
+    q, k, v = _qkv(rng)
+    lengths = jnp.asarray([5, 5, 5, 5], jnp.int32)
+    acc, m, l = decode_partials(q, k[:, 8:16], v[:, 8:16], lengths,
+                                pos_offset=8)
+    assert np.all(np.asarray(acc) == 0.0)
+    assert np.all(np.asarray(m) == NEG_INF)
+    assert np.all(np.asarray(l) == 0.0)
+    out = _seq_split_merge(q, k, v, lengths, ranks=4)
+    assert np.isfinite(np.asarray(out)).all()
+    ref = decode_attention_reference(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_all_ranks_empty_masked_slot_is_zero(rng):
+    """A never-attended slot (lengths=0) must come out of the merge as
+    exactly zero — the single-device kernel's convention — not NaN from
+    a 0/0 normalization."""
+    q, k, v = _qkv(rng)
+    lengths = jnp.asarray([0, 0, 3, 0], jnp.int32)
+    out = np.asarray(_seq_split_merge(q, k, v, lengths, ranks=4))
+    assert np.isfinite(out).all()
+    assert np.all(out[[0, 1, 3]] == 0.0)
+    ref = np.asarray(decode_attention_reference(q, k, v, lengths))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_int8_kv_partials_match_reference(rng):
+    """int8 KV codes + per-(token, head) scales through the partials path
+    equal the reference fed the same codes/scales."""
+    q, k, v = _qkv(rng)
+    kq, ks = L.kv_quantize(k)
+    vq, vs = L.kv_quantize(v)
+    lengths = jnp.asarray([11, 32, 3, 0], jnp.int32)
+    out = _seq_split_merge(q, kq, vq, lengths, ranks=4,
+                           k_scale=ks, v_scale=vs)
+    ref = decode_attention_reference(q, kq, vq, lengths,
+                                     k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_windowed_partials_match_reference(rng):
+    """Ring/windowed masking (pos >= lengths - window) survives the
+    split: a rank may own only the below-window (fully masked) range."""
+    q, k, v = _qkv(rng)
+    lengths = jnp.asarray([30, 17, 9, 32], jnp.int32)
+    out = _seq_split_merge(q, k, v, lengths, ranks=4, window=8)
+    ref = decode_attention_reference(q, k, v, lengths, window=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("ranks", [2, 4])
+def test_head_split_is_exact(rng, ranks):
+    """KV-head sharding (the serving layout): each rank owns Hkv/ranks
+    whole heads, so no softmax is split — stacking full-width partials
+    with non-owned rows at (0, NEG_INF, 0) must reproduce the reference
+    BIT-exactly (owner rescale is exp(0) = 1; everyone else is 0)."""
+    q, k, v = _qkv(rng)
+    lengths = jnp.asarray([7, 13, 32, 1], jnp.int32)
+    g = HQ // HKV
+    hkv_loc, hq_loc = HKV // ranks, HQ // ranks
+    accs, ms, ls = [], [], []
+    for r in range(ranks):
+        hs = slice(r * hkv_loc, (r + 1) * hkv_loc)
+        acc_l, m_l, l_l = decode_partials(
+            q[:, r * hq_loc:(r + 1) * hq_loc], k[:, :, hs], v[:, :, hs],
+            lengths)
+        acc = jnp.zeros((B, HQ, D), jnp.float32)
+        m = jnp.full((B, HQ), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, HQ), jnp.float32)
+        accs.append(acc.at[:, r * hq_loc:(r + 1) * hq_loc].set(acc_l))
+        ms.append(m.at[:, r * hq_loc:(r + 1) * hq_loc].set(m_l))
+        ls.append(l.at[:, r * hq_loc:(r + 1) * hq_loc].set(l_l))
+    out = merge_partials(jnp.stack(accs), jnp.stack(ms), jnp.stack(ls))
+    full_acc, full_m, full_l = decode_partials(q, k, v, lengths)
+    single = merge_partials(full_acc[None], full_m[None], full_l[None])
+    assert g >= 1  # GQA grouping: q heads follow their kv head
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(single))
+    ref = decode_attention_reference(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_merge_is_associative_under_rank_grouping(rng):
+    """Merging 4 rank partials at once == merging two pre-merged pairs'
+    partials: the (acc, m, l) triple is a proper monoid element, which is
+    what lets a future hierarchical (intra-node then inter-node) reduce
+    use the same math."""
+    q, k, v = _qkv(rng)
+    lengths = jnp.asarray([7, 19, 32, 26], jnp.int32)
+    chunk = S // 4
+    parts = [decode_partials(q, k[:, r * chunk:(r + 1) * chunk],
+                             v[:, r * chunk:(r + 1) * chunk], lengths,
+                             pos_offset=r * chunk) for r in range(4)]
+    flat = merge_partials(jnp.stack([p[0] for p in parts]),
+                          jnp.stack([p[1] for p in parts]),
+                          jnp.stack([p[2] for p in parts]))
+
+    def pair_partial(a, b):
+        """Combine two partials into one UNNORMALIZED partial."""
+        m = jnp.maximum(a[1], b[1])
+        sa, sb = jnp.exp(a[1] - m), jnp.exp(b[1] - m)
+        return (a[0] * sa[..., None] + b[0] * sb[..., None],
+                m, a[2] * sa + b[2] * sb)
+
+    left = pair_partial(parts[0], parts[1])
+    right = pair_partial(parts[2], parts[3])
+    grouped = merge_partials(jnp.stack([left[0], right[0]]),
+                             jnp.stack([left[1], right[1]]),
+                             jnp.stack([left[2], right[2]]))
+    np.testing.assert_allclose(np.asarray(grouped), np.asarray(flat),
+                               rtol=1e-5, atol=1e-6)

@@ -31,6 +31,13 @@ the offending key named:
     stopped firing).
   * ``degraded.completed_ok + degraded.failed`` == ``degraded.n_requests``
     — every request landed in a terminal status; none leaked.
+  * ``sharded.tokens_match`` is true and ``sharded.decoded_tokens`` ==
+    ``sharded.decoded_tokens_single`` — the 4-rank tensor-parallel engine
+    emits the single-device token streams verbatim, at equal counts.
+  * ``sharded.kv_bytes_per_token_per_rank`` ==
+    ``sharded.kv_bytes_per_token / sharded.tp_ranks`` (0.1% tolerance) —
+    each rank streams only its KV-head slice of every visited page, so
+    per-rank traffic scales 1/N with the mesh.
 * ``BENCH_decode_attn.json``
   * ``kv_block_ratio`` < 0.7 — the TDA kernel's predicated grid visits
     blocks in proportion to occupancy, not capacity.
@@ -87,6 +94,22 @@ GATES = [
      == rec["degraded"]["n_requests"],
      "ok + failed == n_requests (every request reaches a terminal "
      "status; none leaked)"),
+    ("BENCH_decode.json", "sharded.tokens_match",
+     lambda v, rec: v is True, "True (4-rank sharded decode emits the "
+     "single-device token streams verbatim)"),
+    ("BENCH_decode.json", "sharded.decoded_tokens",
+     lambda v, rec: v > 0 and v == rec["sharded"]["decoded_tokens_single"],
+     "> 0 and == sharded.decoded_tokens_single (token identity is at "
+     "equal counts on the same workload)"),
+    ("BENCH_decode.json", "sharded.tp_ranks",
+     lambda v, rec: v == 4, "== 4 (the sharded row actually ran on a "
+     "4-rank mesh, not a silent 1-device fallback)"),
+    ("BENCH_decode.json", "sharded.kv_bytes_per_token_per_rank",
+     lambda v, rec: abs(v * rec["sharded"]["tp_ranks"]
+                        - rec["sharded"]["kv_bytes_per_token"])
+     <= 1e-3 * rec["sharded"]["kv_bytes_per_token"],
+     "== sharded.kv_bytes_per_token / tp_ranks within 0.1% (per-rank KV "
+     "traffic scales 1/N: each rank streams only its head-slice)"),
     ("BENCH_decode_attn.json", "kv_block_ratio",
      lambda v, rec: v < 0.7, "< 0.7 (predicated TDA grid vs dense sweep)"),
 ]

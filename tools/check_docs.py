@@ -65,6 +65,16 @@ REQUIRED_ANCHORS = [
     ("serving.md", "AuditError"),
     ("serving.md", "decode/degraded"),
     ("serving.md", "UnsupportedConfigError"),
+    # tensor-parallel sharded decode contract: the section, the merge
+    # kernel, the per-rank traffic metric, the tracked bench row, and the
+    # README coverage column
+    ("serving.md", "Sharded decode"),
+    ("serving.md", "kernels/tda/sharded.py"),
+    ("serving.md", "tensor_parallel_size"),
+    ("serving.md", "kv_bytes_per_token_per_rank"),
+    ("serving.md", "decode/sharded"),
+    ("README.md", "decode/sharded"),
+    ("README.md", "| Mesh |"),
 ]
 
 PATH_RE = re.compile(
