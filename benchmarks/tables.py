@@ -527,6 +527,58 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
                            + out.stderr[-3000:])
     shr = json.loads(out.stdout.strip().splitlines()[-1])
 
+    # ---- mixed-step serving: chunked prefill interleaved with decode in
+    # ONE jitted step (Engine(mixed=True)). Bursty long-prompt workload —
+    # three arrival waves (two landing mid-decode), every prompt 4-8x
+    # max_len so the phase-serialized engine admits each request with a
+    # SOLO whole-prompt sweep while the mixed engine streams them all
+    # through width-``max_len`` chunk rows of the shared step. The
+    # identical arrival schedule replays through both engines; check_bench
+    # gates slot utilization >= the serialized baseline, ttft_p99
+    # (modeled device tokens: each jitted dispatch costs its sequence
+    # width, batch rows ride idle PE lanes free — same convention as the
+    # bytes-per-token accounting) strictly below it, and byte-identical
+    # token streams. Wall-second TTFT rides along ungated: at smoke scale
+    # host wall time is row-linear FLOPs, which inverts the dispatch-cost
+    # story the device-token model captures. float32 config: the gate is
+    # exact token identity, and bf16 near-tie argmaxes legitimately flip
+    # between the chunked and whole-prompt evaluation orders.
+    cfg_x = get_config("qwen2.5-32b", "smoke", dtype="float32")
+    model_x = Model(cfg_x)
+    params_x = model_x.init(jax.random.key(0))
+    ml_x, mn_x, ns_x = 64, 12, 8
+    m_rng = np.random.default_rng(7)
+    spec_x = [(1 if i < 8 else 4 if i < 16 else 8,
+               int(m_rng.integers(280, 500)),
+               int(m_rng.integers(2, 5)))
+              for i in range(24)]
+
+    def arrivals_x():
+        r8 = np.random.default_rng(10)
+        return [(t, Request(rid=300 + i, prompt=r8.integers(
+                        0, cfg_x.vocab_size, size=L).astype(np.int32),
+                        max_new_tokens=b))
+                for i, (t, L, b) in enumerate(spec_x)]
+
+    def run_bursty(mixed: bool):
+        e = Engine(model_x, params_x, max_len=ml_x, max_new_tokens=mn_x,
+                   num_slots=ns_x, decode_block_k=32, paged=True,
+                   page_size=8, prefix_share=False, max_prompt_len=512,
+                   mixed=mixed)
+        e.run(arrivals=arrivals_x())  # compile
+        t0 = time.perf_counter()
+        d = e.run(arrivals=arrivals_x())
+        secs = time.perf_counter() - t0
+        toks = {r.rid: tuple(r.output) for r in d}
+        tt = e.decode_stats["ttft"].values()
+        dev = sorted(v["device_tokens"] for v in tt)
+        wall = sorted(v["wall_s"] for v in tt)
+        return secs, toks, e.decode_stats, dev, wall
+
+    mx_s, mx_t, mx, mx_tt, mx_w = run_bursty(True)
+    sr_s, sr_t, sr, sr_tt, sr_w = run_bursty(False)
+    tok_x = sum(len(v) for v in sr_t.values())
+
     ARTIFACTS["decode"] = {
         "tokens_per_s": useful / ct_s,
         "tokens_per_s_lockstep": useful / ls_s,
@@ -592,6 +644,31 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
         # equal counts, and per-rank KV traffic must be exactly
         # kv_bytes_per_token / tp_ranks.
         "sharded": shr,
+        # tracked mixed-step gates (tools/check_bench.py): on the bursty
+        # arrival schedule the interleaved engine must keep slot
+        # utilization >= the phase-serialized baseline, push ttft_p99
+        # (modeled device tokens between submit and first token) strictly
+        # below it, and emit the serialized token streams verbatim.
+        # ttft_*_s wall seconds are reference-only (host FLOPs, ungated).
+        "mixed": {
+            "tokens_match": mx_t == sr_t,
+            "tokens_per_s": tok_x / mx_s,
+            "tokens_per_s_serialized": tok_x / sr_s,
+            "slot_utilization": mx["slot_utilization"],
+            "slot_utilization_serialized": sr["slot_utilization"],
+            "ttft_p50": float(np.percentile(mx_tt, 50)),
+            "ttft_p99": float(np.percentile(mx_tt, 99)),
+            "ttft_p50_serialized": float(np.percentile(sr_tt, 50)),
+            "ttft_p99_serialized": float(np.percentile(sr_tt, 99)),
+            "ttft_p50_s": float(np.percentile(mx_w, 50)),
+            "ttft_p99_s": float(np.percentile(mx_w, 99)),
+            "ttft_p50_s_serialized": float(np.percentile(sr_w, 50)),
+            "ttft_p99_s_serialized": float(np.percentile(sr_w, 99)),
+            "mixed_steps": mx["mixed_steps"],
+            "prefill_chunk_tokens": mx["prefill_chunk_tokens"],
+            "prefill_budget": mx["prefill_budget"],
+            "n_requests": len(spec_x),
+        },
     }
     return [
         ("decode/lockstep", ls_s * 1e6,
@@ -632,6 +709,14 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
          f"kv_bytes/tok/rank={shr['kv_bytes_per_token_per_rank']:.0f} "
          f"(= 1/{shr['tp_ranks']} of {shr['kv_bytes_per_token']:.0f}; "
          f"KV-head-sharded pages)"),
+        ("decode/mixed", mx_s * 1e6,
+         f"tok/s={tok_x / mx_s:.0f} vs serialized {tok_x / sr_s:.0f} "
+         f"slot_util={mx['slot_utilization']:.2f} vs "
+         f"{sr['slot_utilization']:.2f} "
+         f"ttft_p99={np.percentile(mx_tt, 99):.0f} vs "
+         f"{np.percentile(sr_tt, 99):.0f} device-tokens "
+         f"tokens_match={mx_t == sr_t} "
+         f"(bursty long-prompt arrivals, chunk width {ml_x})"),
         ("decode/compressed", cm_s * 1e6,
          f"bytes/tok={cm['bytes_per_token']:.0f} vs dense "
          f"{fd['bytes_per_token']:.0f} "

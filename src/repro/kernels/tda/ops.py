@@ -14,14 +14,19 @@ from typing import Optional
 import jax.numpy as jnp
 
 from repro.kernels.common import resolve_interpret
-from repro.kernels.tda.ref import block_stats, decode_attention_reference
+from repro.kernels.tda.ref import (
+    block_stats,
+    decode_attention_reference,
+    mixed_attention_reference,
+)
 from repro.kernels.tda.tda import (
     tda_decode_attention,
+    tda_mixed_attention,
     tda_paged_decode_attention,
 )
 
-__all__ = ["fused_decode_attention", "gather_paged_lanes",
-           "paged_flat_positions", "block_stats"]
+__all__ = ["fused_decode_attention", "fused_mixed_attention",
+           "gather_paged_lanes", "paged_flat_positions", "block_stats"]
 
 
 def _pad_seq(x: Optional[jnp.ndarray], target: int) -> Optional[jnp.ndarray]:
@@ -144,3 +149,52 @@ def fused_decode_attention(
         q, k, v, bounds, k_scale, v_scale, lut_table, block_k=bk,
         interpret=resolve_interpret(interpret)).astype(q.dtype)
     return out[:, None] if squeeze else out
+
+
+def fused_mixed_attention(
+    q: jnp.ndarray,      # (B, S, Hq, D) chunk queries, left-aligned
+    k: jnp.ndarray,      # (P, page_size, Hkv, D) PRE-write page pool
+    v: jnp.ndarray,
+    k_row: jnp.ndarray,  # (B, S, Hkv, D) fp this-chunk keys
+    v_row: jnp.ndarray,
+    cache_index: jnp.ndarray,  # (B,): tokens resident in the lane
+    n_new: jnp.ndarray,        # (B,): valid chunk columns, in [0, S]
+    *,
+    block_table: jnp.ndarray,  # (B, n) paged lane pool table
+    ring: int,                 # logical lane width
+    window: Optional[int] = None,
+    k_scale: Optional[jnp.ndarray] = None,  # (P, page_size, Hkv)
+    v_scale: Optional[jnp.ndarray] = None,
+    lut_table: Optional[jnp.ndarray] = None,
+    use_kernel: bool = True,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Multi-query mixed-step attention over paged slot lanes.
+
+    The mixed serving step's attention entry point: query column ``j`` of
+    row ``b`` sits at absolute position ``cache_index[b] + j`` and attends
+    the union of the slot's pre-write lane occupancy and the causally
+    visible in-row chunk columns ``< n_new[b]`` — so chunked-prefill
+    attention is predicated the same way decode is (cache blocks outside
+    the occupied span are skipped). Semantics (masks, ring position
+    recovery, never-attended zeros) are pinned by
+    :func:`repro.kernels.tda.ref.mixed_attention_reference`. Returns
+    (B, S, Hq, D) in ``q.dtype``.
+    """
+    ci = jnp.reshape(cache_index, (-1,)).astype(jnp.int32)
+    nn = jnp.reshape(n_new, (-1,)).astype(jnp.int32)
+    if not use_kernel:
+        out = mixed_attention_reference(
+            q, gather_paged_lanes(k, block_table),
+            gather_paged_lanes(v, block_table), k_row, v_row, ci, nn,
+            ring=ring, window=window,
+            k_scale=None if k_scale is None
+            else gather_paged_lanes(k_scale, block_table),
+            v_scale=None if v_scale is None
+            else gather_paged_lanes(v_scale, block_table))
+        return out.astype(q.dtype)
+    bounds = jnp.stack([ci, nn], axis=1).astype(jnp.int32)
+    return tda_mixed_attention(
+        q, k, v, k_row, v_row, bounds, block_table.astype(jnp.int32),
+        k_scale, v_scale, lut_table, ring=ring, window=window,
+        interpret=resolve_interpret(interpret)).astype(q.dtype)

@@ -22,7 +22,8 @@ import numpy as np
 
 NEG_INF = -1e30
 
-__all__ = ["decode_attention_reference", "block_stats"]
+__all__ = ["decode_attention_reference", "mixed_attention_reference",
+           "block_stats"]
 
 
 def _dequant(codes: jnp.ndarray, scale: Optional[jnp.ndarray]) -> jnp.ndarray:
@@ -72,6 +73,79 @@ def decode_attention_reference(
     if squeeze:
         o = o[:, None]
     return o
+
+
+def mixed_attention_reference(
+    q: jnp.ndarray,      # (B, S, Hq, D) chunk queries, left-aligned
+    k: jnp.ndarray,      # (B, W, Hkv, D) PRE-write lane view (fp or int8)
+    v: jnp.ndarray,
+    k_row: jnp.ndarray,  # (B, S, Hkv, D) fp this-chunk keys (same layout as q)
+    v_row: jnp.ndarray,
+    cache_index: jnp.ndarray,  # (B,): tokens already resident in the lane
+    n_new: jnp.ndarray,        # (B,): valid chunk columns, in [0, S]
+    *,
+    ring: int,  # logical lane width (cache_len for full lanes, the window
+    # for ring lanes) — lane positions >= ring are gather padding
+    window: Optional[int] = None,
+    k_scale: Optional[jnp.ndarray] = None,  # (B, W, Hkv) when k is int8
+    v_scale: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Multi-query decode attention for the mixed (chunked-prefill) step.
+
+    Row ``b`` carries ``n_new[b]`` fresh tokens at absolute positions
+    ``[cache_index, cache_index + n_new)``; query column ``j`` attends the
+    union of
+
+    * the **pre-write lane view**: lane position ``r`` holds the token at
+      absolute position ``p_r = ci - 1 - ((ci - 1 - r) mod ring)`` (canonical
+      ring phase run backwards from the newest resident token), valid iff
+      ``p_r >= 0`` — one formula covers full lanes (``p_r == r`` for
+      ``r < ci``) and wrapped rings; and
+    * the **in-row chunk**: column ``i`` valid iff ``i <= j`` (causal) and
+      ``i < n_new``.
+
+    ``window`` adds the usual lower bound on both sides. Columns ``j >=
+    n_new`` produce garbage the caller must ignore; rows with no valid key
+    at all return zeros (the kernel's never-attended convention).
+    """
+    B, S, Hq, D = q.shape
+    W, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    kf = _dequant(k, k_scale)
+    vf = _dequant(v, v_scale)
+    ci = jnp.reshape(cache_index, (-1, 1)).astype(jnp.int32)  # (B, 1)
+    nn = jnp.reshape(n_new, (-1, 1)).astype(jnp.int32)
+    cols = jnp.arange(S, dtype=jnp.int32)
+    p_q = ci + cols[None, :]                                  # (B, S)
+    r = jnp.arange(W, dtype=jnp.int32)
+    p_r = (ci - 1) - jnp.mod(ci - 1 - r[None, :], ring)       # (B, W)
+    cache_valid = (p_r >= 0) & (r[None, :] < ring)            # (B, W)
+    cache_valid = cache_valid[:, None, :] & jnp.ones(
+        (1, S, 1), bool)                                      # (B, S, W)
+    row_valid = (cols[None, :, None] >= cols[None, None, :]) \
+        & (cols[None, None, :] < nn[:, :, None])              # (B, S, S)
+    if window is not None:
+        cache_valid &= p_r[:, None, :] > (p_q[:, :, None] - window)
+        row_valid &= (cols[None, :, None] - cols[None, None, :]) < window
+
+    qg = q.astype(jnp.float32).reshape(B, S, Hkv, G, D)
+    s_c = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf,
+                     preferred_element_type=jnp.float32) / np.sqrt(D)
+    s_r = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                     k_row.astype(jnp.float32),
+                     preferred_element_type=jnp.float32) / np.sqrt(D)
+    s_c = jnp.where(cache_valid[:, None, None], s_c, NEG_INF)
+    s_r = jnp.where(row_valid[:, None, None], s_r, NEG_INF)
+    s = jnp.concatenate([s_c, s_r], axis=-1)  # (B, Hkv, G, S, W + S)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p[..., :W], vf,
+                   preferred_element_type=jnp.float32)
+    o += jnp.einsum("bhgqk,bkhd->bhgqd", p[..., W:],
+                    v_row.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, S, Hq, D)
+    dead = (ci <= 0) & (nn <= 0)  # (B, 1): no resident and no fresh keys
+    return jnp.where(dead[:, :, None, None], 0.0, o)
 
 
 def block_stats(lengths, cache_len: int, block_k: int,

@@ -61,7 +61,8 @@ from repro.kernels.afu.ref import LUT_SIZE, lut_exp
 
 NEG_INF = -1e30
 
-__all__ = ["tda_decode_attention", "tda_paged_decode_attention"]
+__all__ = ["tda_decode_attention", "tda_paged_decode_attention",
+           "tda_mixed_attention"]
 
 
 def _exp(x, table):
@@ -283,5 +284,183 @@ def tda_paged_decode_attention(q, k, v, bounds, block_table, k_scale=None,
                           quant=quant, lut=lut),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hq, D), jnp.float32),
+        interpret=interpret,
+    )(*args)
+
+
+def _tda_mixed_kernel(bounds_ref, bt_ref, q_ref, k_ref, v_ref, kr_ref,
+                      vr_ref, *rest, bk: int, groups: int, quant: bool,
+                      lut: bool, ring: int, window, S: int):
+    """Mixed (multi-query) grid step: cache blocks 0..nk-1 are predicated on
+    the slot's pre-write occupancy exactly like decode; the final grid step
+    folds the in-row chunk keys in and normalizes. Online-softmax state is
+    per (query column, head) — scratch rows are laid out (Hkv, S, G)."""
+    del bt_ref  # consumed by the in_specs index maps
+    rest = list(rest)
+    ks_ref = rest.pop(0) if quant else None
+    vs_ref = rest.pop(0) if quant else None
+    table = rest.pop(0)[...] if lut else None
+    o_ref, o_acc, m_acc, l_acc = rest
+    b = pl.program_id(0)
+    kb = pl.program_id(1)
+    nk = pl.num_programs(1) - 1  # last grid step is the in-row chunk
+    ci = bounds_ref[b, 0]  # tokens resident in the lane (pre-write)
+    nn = bounds_ref[b, 1]  # fresh chunk columns this step
+
+    @pl.when(kb == 0)
+    def _init():
+        o_acc[...] = jnp.zeros_like(o_acc)
+        m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+        l_acc[...] = jnp.zeros_like(l_acc)
+
+    def attend(kblk, vblk, valid):
+        """One online-softmax block over ``kblk`` (bkk, Hkv, D) with a
+        per-(query, key) ``valid`` mask (S, bkk)."""
+        q = q_ref[0].astype(jnp.float32)  # (S, Hq, D)
+        Hq, D = q.shape[1], q.shape[2]
+        Hkv = kblk.shape[1]
+        qg = q.reshape(S, Hkv, groups, D).transpose(1, 0, 2, 3)
+        qg = qg.reshape(Hkv, S * groups, D)
+        s = jax.lax.dot_general(
+            qg, kblk, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32) * (1.0 / np.sqrt(D))
+        vmask = valid[None, :, None, :]  # (1, S, 1, bkk)
+        s4 = s.reshape(Hkv, S, groups, -1)
+        s = jnp.where(vmask, s4, NEG_INF).reshape(Hkv, S * groups, -1)
+        m_prev = m_acc[...].reshape(Hkv, S * groups)
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = _exp(s - m_new[..., None], table)
+        p = jnp.where(vmask, p.reshape(Hkv, S, groups, -1),
+                      0.0).reshape(Hkv, S * groups, -1)
+        alpha = _exp(m_prev - m_new, table)
+        l_acc[...] = (l_acc[...].reshape(Hkv, S * groups) * alpha
+                      + p.sum(-1)).reshape(S * Hq, 1)
+        pv = jax.lax.dot_general(
+            p, vblk, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)
+        o_acc[...] = (o_acc[...].reshape(Hkv, S * groups, D)
+                      * alpha[..., None] + pv).reshape(S * Hq, D)
+        m_acc[...] = m_new.reshape(S * Hq, 1)
+
+    blk0 = kb * bk
+    hi = jnp.minimum(ci, ring)  # pre-write occupancy: [0, min(ci, ring))
+
+    @pl.when((kb < nk) & (blk0 < hi))
+    def _cache_block():
+        k = k_ref[0].astype(jnp.float32)  # (bk, Hkv, D)
+        v = v_ref[0].astype(jnp.float32)
+        if quant:
+            k = k * ks_ref[0][..., None]
+            v = v * vs_ref[0][..., None]
+        # Lane position r holds absolute token p_r = ci-1 - ((ci-1-r) % ring)
+        # (canonical ring phase walked back from the newest resident token);
+        # one formula covers full lanes (p_r == r for r < ci) and wrapped
+        # rings. Valid iff p_r >= 0 (and inside the window of query p_q).
+        r = blk0 + jax.lax.broadcasted_iota(jnp.int32, (S, bk), 1)
+        p_r = (ci - 1) - jnp.mod(ci - 1 - r, ring)
+        valid = (p_r >= 0) & (r < ring)
+        if window is not None:
+            j = jax.lax.broadcasted_iota(jnp.int32, (S, bk), 0)
+            valid &= p_r > (ci + j - window)
+        attend(k, v, valid)
+
+    @pl.when(kb == nk)
+    def _row_and_finish():
+        @pl.when(nn > 0)
+        def _row_block():
+            kr = kr_ref[0].astype(jnp.float32)  # (S, Hkv, D)
+            vr = vr_ref[0].astype(jnp.float32)
+            j = jax.lax.broadcasted_iota(jnp.int32, (S, S), 0)
+            i = jax.lax.broadcasted_iota(jnp.int32, (S, S), 1)
+            valid = (i <= j) & (i < nn)
+            if window is not None:
+                valid &= (j - i) < window
+            attend(kr, vr, valid)
+
+        # Rows with no resident and no fresh keys keep l == 0 -> zeros.
+        Hq = q_ref.shape[2]
+        D = q_ref.shape[3]
+        Hkv = Hq // groups
+        o = o_acc[...] / jnp.maximum(l_acc[...], 1e-30)
+        o = o.reshape(Hkv, S, groups, D).transpose(1, 0, 2, 3)
+        o_ref[0] = o.reshape(S, Hq, D).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("ring", "window", "interpret"))
+def tda_mixed_attention(q, k, v, k_row, v_row, bounds, block_table,
+                        k_scale=None, v_scale=None, lut_table=None, *,
+                        ring: int, window=None,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Fused multi-query mixed-step attention over a paged KV lane pool.
+
+    q (B, S, Hq, D) chunk queries (column j of row b sits at absolute
+    position ``bounds[b, 0] + j``); k/v physical page pools (P, page_size,
+    Hkv, D), fp or int8 codes (+ per-(token, head) pool scales);
+    k_row/v_row (B, S, Hkv, D) the chunk's own fp keys/values; bounds
+    (B, 2) int32 ``[cache_index, n_new]``; block_table (B, n) as in
+    :func:`tda_paged_decode_attention`. ``ring`` is the logical lane
+    width. Chunked-prefill attention is predicated the same way decode is:
+    cache blocks outside ``[0, min(cache_index, ring))`` are skipped, and
+    the in-row chunk rides one extra always-resident grid step. Returns
+    (B, S, Hq, D) f32.
+    """
+    B, S, Hq, D = q.shape
+    P, ps, Hkv = k.shape[0], k.shape[1], k.shape[2]
+    nk = block_table.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    quant = k_scale is not None
+    lut = lut_table is not None
+
+    def page(b, kb, bounds_ref, bt_ref):
+        # kb == nk is the in-row step: clamp keeps the prefetch in range
+        # (that step never reads the pool refs).
+        return jnp.clip(bt_ref[b, jnp.minimum(kb, nk - 1)], 0, P - 1)
+
+    in_specs = [
+        pl.BlockSpec((1, S, Hq, D), lambda b, kb, bounds, bt: (b, 0, 0, 0)),
+        pl.BlockSpec((1, ps, Hkv, D),
+                     lambda b, kb, bounds, bt: (page(b, kb, bounds, bt),
+                                                0, 0, 0)),
+        pl.BlockSpec((1, ps, Hkv, D),
+                     lambda b, kb, bounds, bt: (page(b, kb, bounds, bt),
+                                                0, 0, 0)),
+        pl.BlockSpec((1, S, Hkv, D), lambda b, kb, bounds, bt: (b, 0, 0, 0)),
+        pl.BlockSpec((1, S, Hkv, D), lambda b, kb, bounds, bt: (b, 0, 0, 0)),
+    ]
+    args = [bounds, block_table, q, k, v, k_row, v_row]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, ps, Hkv),
+                         lambda b, kb, bounds, bt: (page(b, kb, bounds, bt),
+                                                    0, 0)),
+            pl.BlockSpec((1, ps, Hkv),
+                         lambda b, kb, bounds, bt: (page(b, kb, bounds, bt),
+                                                    0, 0)),
+        ]
+        args += [k_scale, v_scale]
+    if lut:
+        in_specs.append(pl.BlockSpec((LUT_SIZE,),
+                                     lambda b, kb, bounds, bt: (0,)))
+        args.append(lut_table)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nk + 1),  # + the in-row chunk step
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, S, Hq, D),
+                               lambda b, kb, bounds, bt: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((S * Hq, D), jnp.float32),  # o accumulator
+            pltpu.VMEM((S * Hq, 1), jnp.float32),  # running max
+            pltpu.VMEM((S * Hq, 1), jnp.float32),  # running denominator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_tda_mixed_kernel, bk=ps, groups=Hq // Hkv,
+                          quant=quant, lut=lut, ring=ring, window=window,
+                          S=S),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, Hq, D), jnp.float32),
         interpret=interpret,
     )(*args)

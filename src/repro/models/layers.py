@@ -30,7 +30,11 @@ from repro.core.factorized import (
     init_linear,
 )
 from repro.kernels.common import resolve_decode_attn
-from repro.kernels.tda.ops import fused_decode_attention, gather_paged_lanes
+from repro.kernels.tda.ops import (
+    fused_decode_attention,
+    fused_mixed_attention,
+    gather_paged_lanes,
+)
 from repro.models.common import ModelConfig
 
 NEG_INF = -1e30
@@ -438,6 +442,10 @@ def attention_block(
     prefix_kv: Optional[Dict] = None,  # suffix prefill (engine-only):
     # {"k"/"v": (B, Np, Hkv, D) fp post-RoPE cached prefix, "len": int32
     # valid prefix length}; queries attend prefix ∥ causal-suffix
+    n_new: Optional[jnp.ndarray] = None,  # mixed step (engine-only, with
+    # ``pages``): (B,) count of fresh tokens per row, in [0, S]. Row b's
+    # columns [0, n_new[b]) sit at absolute positions [cache_index[b],
+    # cache_index[b] + n_new[b]); decode rows pass 1, inert rows 0.
     layer_idx: Optional[jnp.ndarray] = None,  # set when cache is L-stacked
     kv: Optional[jnp.ndarray] = None,  # cross-attention memory (B, Skv, d)
     seg_kv: Optional[jnp.ndarray] = None,
@@ -485,7 +493,83 @@ def attention_block(
     new_cache = None
     ring = cache["k"].shape[-3] if cache is not None else 0
     quant = cache is not None and "k_scale" in cache
-    if cache is not None and S == 1 and pages is not None:
+    if cache is not None and n_new is not None:
+        # ---- mixed step: chunked-prefill and decode tokens in one (B, S)
+        # forward over paged lanes (engine-only). Row b carries n_new[b]
+        # fresh tokens, left-aligned, at absolute positions [cache_index,
+        # cache_index + n_new). Queries attend the PRE-write lane view plus
+        # the causal in-row chunk, and only then does the chunk K/V scatter
+        # into the pool — a chunk write may land on a ring position an
+        # earlier query still needs, so attend-then-write is load-bearing.
+        assert pages is not None, "mixed step requires paged lanes"
+        ps = pages["page_size"]
+        ringw = pages["width"]  # logical lane width (static int)
+        bt = pages["bt"]        # (B, n) int32; FREE sentinel == num_pages
+        P = cache["k"].shape[-4]
+        ci = jnp.reshape(cache_index, (-1,)).astype(jnp.int32)
+        nn = jnp.reshape(n_new, (-1,)).astype(jnp.int32)
+        if slot_mask is not None:
+            sm = jnp.reshape(slot_mask, (-1,))
+            ci = jnp.where(sm, ci, 0)
+            nn = jnp.where(sm, nn, 0)  # inert row: attends nothing, writes
+            # nothing — the engine discards its logits either way
+
+        if quant:
+            kq, ksc = kv_quantize(k)
+            vq, vsc = kv_quantize(v)
+            # In-row keys attend as their resident (round-tripped)
+            # representation — the same values later chunks will read back
+            # out of the pool, so chunk boundaries don't shift attention.
+            k_row = kv_dequantize(kq, ksc, dt)
+            v_row = kv_dequantize(vq, vsc, dt)
+        else:
+            k_row, v_row = k, v
+
+        from repro.launch.mesh import tensor_parallel_size
+        impl = resolve_decode_attn(cfg.decode_attn)
+        use_kernel = impl == "tda" and tensor_parallel_size(mesh) <= 1
+        kcs = vcs = None
+        if quant:
+            kcs = layer_view(cache["k_scale"])
+            vcs = layer_view(cache["v_scale"])
+        o = fused_mixed_attention(
+            q, layer_view(cache["k"]), layer_view(cache["v"]),
+            k_row, v_row, ci, nn, block_table=bt, ring=ringw,
+            window=window, k_scale=kcs, v_scale=vcs,
+            use_kernel=use_kernel)
+        o = o.reshape(B, S, cfg.n_heads * hd)
+
+        # Chunk scatter: token j lands at lane position (ci + j) % ringw.
+        # Only the last min(n_new, ringw) columns write — earlier columns
+        # of a wrapping chunk alias the same lane position and a duplicate
+        # scatter index would make the result order-dependent.
+        cols = jax.lax.iota(jnp.int32, S)[None, :]          # (1, S)
+        lanepos = (ci[:, None] + cols) % ringw              # (B, S)
+        wvalid = (cols < nn[:, None]) & (cols >= nn[:, None] - ringw)
+        page = jnp.take_along_axis(bt, lanepos // ps, axis=1)
+        phys = jnp.where(wvalid, page * ps + lanepos % ps, P * ps)
+        physf = phys.reshape(-1)
+
+        def paged_write_chunk(buf, new):  # new: (B, S, ...)
+            lv = layer_view(buf)  # (P, ps, ...)
+            lvf = lv.reshape((P * ps,) + lv.shape[2:])
+            newf = new.astype(buf.dtype).reshape((B * S,) + new.shape[2:])
+            lvf = lvf.at[physf].set(newf, mode="drop")
+            lv2 = lvf.reshape(lv.shape)
+            if layer_idx is None:
+                return lv2
+            return jax.lax.dynamic_update_slice(
+                buf, lv2[None], (layer_idx,) + (0,) * lv2.ndim)
+
+        if quant:
+            new_cache = {"k": paged_write_chunk(cache["k"], kq),
+                         "v": paged_write_chunk(cache["v"], vq),
+                         "k_scale": paged_write_chunk(cache["k_scale"], ksc),
+                         "v_scale": paged_write_chunk(cache["v_scale"], vsc)}
+        else:
+            new_cache = {"k": paged_write_chunk(cache["k"], k),
+                         "v": paged_write_chunk(cache["v"], v)}
+    elif cache is not None and S == 1 and pages is not None:
         # ---- paged decode: lanes live in a page pool (serve/pages.py) ----
         # Logical lane coordinates are the contiguous layout's (canonical
         # ring phase, [lo, hi) bounds); only the *physical* home of logical

@@ -153,7 +153,8 @@ class Model:
 
     def _block(self, lp: Dict, x: jnp.ndarray, kind: str, *, dicts, positions,
                seg_ids, cache_l, cache_index, mesh, sparse_train,
-               layer_idx=None, slot_mask=None, pages_l=None, prefix_l=None):
+               layer_idx=None, slot_mask=None, pages_l=None, prefix_l=None,
+               n_new=None):
         cfg = self.cfg
         aux = jnp.float32(0.0)
         new_cache = None
@@ -165,7 +166,7 @@ class Model:
                 seg_ids=seg_ids, window=window, cache=cache_l,
                 cache_index=cache_index, slot_mask=slot_mask,
                 layer_idx=layer_idx, pages=pages_l, prefix_kv=prefix_l,
-                sparse_train=sparse_train, mesh=mesh)
+                n_new=n_new, sparse_train=sparse_train, mesh=mesh)
             x = x + a_out
             h2 = L.apply_norm(lp["norm2"], x)
             if cfg.moe is not None:
@@ -211,7 +212,7 @@ class Model:
 
     def _stack_forward(self, params, x, *, dicts, positions, seg_ids, caches,
                        cache_index, mesh, sparse_train, unroll=False,
-                       slot_mask=None, pages=None, prefix=None):
+                       slot_mask=None, pages=None, prefix=None, n_new=None):
         """Run the block stack; returns (x, new_caches, aux). ``pages`` is
         the paged-decode block-table info: one entry shared by every layer
         of a uniform stack, or ``{layer_name: entry-or-None}`` for
@@ -236,7 +237,7 @@ class Model:
                     seg_ids=seg_ids, cache_l=cur_caches,
                     cache_index=cache_index, mesh=mesh,
                     sparse_train=sparse_train, layer_idx=i,
-                    slot_mask=slot_mask, pages_l=pages)
+                    slot_mask=slot_mask, pages_l=pages, n_new=n_new)
                 aux = aux + aux_l
             return x, cur_caches, aux
         if cfg.uniform_layers:
@@ -265,7 +266,8 @@ class Model:
                     seg_ids=seg_ids, cache_l=cache_arg,
                     cache_index=cache_index, mesh=mesh,
                     sparse_train=sparse_train, layer_idx=li,
-                    slot_mask=slot_mask, pages_l=pages, prefix_l=prefix_l)
+                    slot_mask=slot_mask, pages_l=pages, prefix_l=prefix_l,
+                    n_new=n_new)
                 if caches is None:
                     return (xc, aux + aux_l), None
                 return (xc, aux + aux_l, new_cache), None
@@ -298,7 +300,8 @@ class Model:
                 self._block, kind=cfg.block_kind(i), dicts=dicts,
                 positions=positions, seg_ids=seg_ids, cache_l=cache_l,
                 cache_index=cache_index, mesh=mesh, sparse_train=sparse_train,
-                slot_mask=slot_mask, pages_l=pages_l, prefix_l=prefix_l)
+                slot_mask=slot_mask, pages_l=pages_l, prefix_l=prefix_l,
+                n_new=n_new)
             if cfg.remat != "none":
                 policy = getattr(jax.checkpoint_policies, cfg.remat)
                 blk = jax.checkpoint(blk, policy=policy, static_argnums=())
@@ -482,6 +485,46 @@ class Model:
             caches=caches, cache_index=ci, mesh=mesh,
             sparse_train=False, unroll=cfg.unroll_decode,
             slot_mask=slot_mask, pages=pages)
+        x = L.apply_norm(params["final_norm"], x)
+        logits = L.lm_logits(params["lm_head"], params["embed"], x, cfg)
+        return logits, new_caches
+
+    def mixed_step(self, params: Dict, batch: Dict, caches,
+                   cache_index: jnp.ndarray, n_new: jnp.ndarray, *,
+                   mesh=None, slot_mask: Optional[jnp.ndarray] = None,
+                   pages=None) -> Tuple[jnp.ndarray, Any]:
+        """One fixed-shape mixed step: up to ``S`` tokens per row, packing
+        prefill-chunk rows (``n_new[b] > 1``) alongside decode rows
+        (``n_new[b] == 1``) and inert rows (``n_new[b] == 0``) in a single
+        jitted forward. batch: {"inputs": (B, S)} left-aligned — row b's
+        columns ``[0, n_new[b])`` are its fresh tokens at absolute positions
+        ``[cache_index[b], cache_index[b] + n_new[b])``.
+
+        Requires the paged cache layout (``pages``) and an attention-only
+        stack: recurrent blocks have no variable-token mixed path (the
+        serving engine gates them back to phase-serialized admission).
+        Returns all-position logits ``(B, S, V)``; the caller samples row
+        b's next token from column ``n_new[b] - 1`` and ignores the rest.
+        ``cache_index``/``slot_mask`` semantics match :meth:`decode_step`;
+        the per-row chunk K/V is scattered into the paged lanes through the
+        block tables after attention (pre-write lane view + causal in-row
+        chunk — see :func:`repro.kernels.tda.ref.mixed_attention_reference`
+        for the mask contract).
+        """
+        cfg = self.cfg
+        ref = batch["embeds"] if cfg.external_embeddings else batch["inputs"]
+        B, S = ref.shape[0], ref.shape[1]
+        ci = jnp.asarray(cache_index, jnp.int32)
+        nn = jnp.asarray(n_new, jnp.int32)
+        positions = (jnp.reshape(ci, (-1, 1))
+                     + jnp.arange(S, dtype=jnp.int32)[None, :])
+        dicts = params.get("dicts")
+        x = self._embed_in(params, batch, positions)
+        x, new_caches, _ = self._stack_forward(
+            params, x, dicts=dicts, positions=positions, seg_ids=None,
+            caches=caches, cache_index=ci, mesh=mesh, sparse_train=False,
+            unroll=cfg.unroll_decode, slot_mask=slot_mask, pages=pages,
+            n_new=nn)
         x = L.apply_norm(params["final_norm"], x)
         logits = L.lm_logits(params["lm_head"], params["embed"], x, cfg)
         return logits, new_caches

@@ -67,6 +67,27 @@ over pool capacity, the footprint metric), ``preemptions``,
 ``prefix_hit_ratio`` (prompt tokens served from shared pages over prompt
 tokens admitted) and ``pages_shared`` after :meth:`run`.
 
+**Mixed step** (default for paged attention-only stacks): instead of
+phase-serializing whole-prompt prefill sweeps against the decode loop, the
+engine streams each admitted prompt through per-step *chunks* of one
+fixed-shape jitted ``mixed_fn`` — up to ``prefill_budget`` fresh prompt
+tokens per step packed alongside every active decode slot, writing chunk
+K/V straight into the paged lanes (``Model.mixed_step``). A new request
+claims a free slot immediately (no prefill cache, no lane copy) and its
+time-to-first-token is bounded by ``ceil(prompt / prefill_budget)`` steps
+that keep decoding everyone else, instead of by whoever's full-prompt
+sweep is in front of it. Token-identical to the serialized engine by
+construction: chunk queries attend [resident lane ∥ causal in-row chunk]
+at absolute positions, the completion token is sampled from the same
+logits position with the same keys, and preemption/CoW/prefix sharing
+compose unchanged. ``mixed=False`` forces the serialized phases;
+``mixed=True`` on an unsupported stack (recurrent layers, contiguous
+lanes, quantized KV) raises. :meth:`run` accepts ``arrivals`` — a list of
+``(tick, Request)`` submitted when the virtual clock reaches ``tick`` —
+so bursty mid-decode traffic is replayable, and ``decode_stats["ttft"]``
+records each finished request's first-token latency (wall seconds and
+clock ticks) for the ``ttft_p50``/``ttft_p99`` bench sidecars.
+
 **Failure hardening** (``docs/serving.md``, "Serving failure model"):
 every request the engine returns carries a terminal ``status`` (``ok |
 rejected | shed | timed_out | failed``) and the engine degrades instead
@@ -113,7 +134,8 @@ strictly below the dense-factorized run of the same workload
 from __future__ import annotations
 
 import os
-from typing import Dict, List, Optional, Tuple
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -161,7 +183,9 @@ class Engine:
                  default_ttl_steps: Optional[int] = None,
                  max_preemptions_per_request: Optional[int] = None,
                  watchdog_patience: int = 64,
-                 page_cap: Optional[int] = None):
+                 page_cap: Optional[int] = None,
+                 mixed: Optional[bool] = None,
+                 prefill_budget: Optional[int] = None):
         # Fail unsupported deployments at construction, not mid-decode:
         # compressed MoE expert streams (wd_vq) cannot ride moe_ffn's
         # sharded EP/TP path, whose in_specs shard the dense 'wd' leaf.
@@ -257,6 +281,37 @@ class Engine:
         self._shared_tokens = 0
         self._prompt_tokens = 0
         self._pages_shared = 0
+        # ---- mixed step (chunked prefill interleaved with decode): fold
+        # up to ``prefill_budget`` fresh prompt tokens per step into the
+        # same fixed-shape jitted call that advances every decode slot.
+        # Needs paged attention lanes (chunk K/V scatters straight through
+        # the block tables — there is no prefill cache to lane-copy from)
+        # and an attention-only stack (a recurrent layer has no
+        # multi-token decode form here). kv_quant is gated off: a later
+        # chunk would attend the *quantized* K/V of earlier chunks while
+        # the serialized prefill attends unquantized — not token-identical.
+        mixed_ok = (has_attn and not self._recurrent and self.paged
+                    and not model.cfg.kv_quant)
+        if mixed is None:
+            self.mixed = mixed_ok
+        elif mixed and not mixed_ok:
+            raise UnsupportedConfigError(
+                "mixed-step serving needs a paged, attention-only, "
+                f"unquantized-KV stack: got paged={self.paged}, "
+                f"recurrent={self._recurrent}, "
+                f"kv_quant={model.cfg.kv_quant}. Drop mixed=True to use "
+                "the phase-serialized engine.")
+        else:
+            self.mixed = bool(mixed)
+        if prefill_budget is not None and prefill_budget < 1:
+            raise ValueError(
+                f"prefill_budget must be >= 1 token/step, got "
+                f"{prefill_budget}")
+        self.prefill_budget = prefill_budget
+        # Static chunk-row width of the mixed step (one compiled shape):
+        # no row ever carries more fresh tokens than the whole-step budget
+        # or a serialized prefill row would.
+        self._chunk_width = max(1, min(max_len, prefill_budget or max_len))
         # Static layer -> lane-width map for the paged decode step: one
         # width for uniform stacks, per-layer (None on recurrent layers)
         # otherwise. Derived from the slot table's per-leaf widths — the
@@ -338,6 +393,16 @@ class Engine:
         # Deterministic virtual clock: one tick per run-loop iteration
         # (plus injected stall ticks); deadlines count against it.
         self._clock = 0
+        # Modeled device time: every jitted forward dispatch advances this
+        # by its SEQUENCE width (decode steps by 1, a width-S mixed step by
+        # S, a solo whole-prompt sweep by its full concatenated width).
+        # Batch rows ride in parallel PE lanes and are free, matching the
+        # paper's dynamic-batching utilization argument — and the same
+        # modeled-cost convention as the bytes-per-token accounting. TTFT
+        # deltas against this counter are the deterministic, CI-gateable
+        # latency proxy at smoke scale, where wall time measures host FLOPs
+        # (row-linear) instead of dispatch latency.
+        self._device_time = 0
         # Per-engine terminal-status counters, reported (then reset) in
         # decode_stats["status_counts"]; requests finished outside a slot
         # (shed/rejected at submit) park in _terminal until the next run().
@@ -406,6 +471,43 @@ class Engine:
             nxt = jnp.where(bad, jnp.int32(-1), nxt)
             return nxt, new_caches
 
+        def mixed_fn(params, tokens, caches, lengths, n_new, active, seeds,
+                     tables, nan_mask):
+            # One fixed-shape step over chunk rows AND decode rows:
+            # row b's columns [0, n_new[b]) are fresh tokens at absolute
+            # positions [lengths[b], lengths[b] + n_new[b]) — decode rows
+            # pass n_new == 1, budget-starved chunk rows 0 (inert).
+            def entry(w):
+                return {"bt": tables[w][:num_slots], "width": w,
+                        "page_size": self.page_size}
+            if isinstance(self._page_struct, dict):
+                pages = {name: (entry(w) if w is not None else None)
+                         for name, w in self._page_struct.items()}
+            else:
+                pages = entry(self._page_struct)
+            logits, new_caches = dmodel.mixed_step(
+                params, {"inputs": tokens}, caches, lengths, n_new,
+                slot_mask=active, pages=pages, mesh=mesh)
+            S = tokens.shape[1]
+            # The step's emitted token comes from chunk column n_new - 1
+            # (clamped; inert rows read column 0 and the host ignores it).
+            last = jnp.clip(n_new - 1, 0, S - 1)
+            row = jnp.take_along_axis(logits, last[:, None, None],
+                                      axis=1)[:, 0]
+            row = jnp.where(nan_mask[:, None], jnp.nan, row)
+            if self.temperature > 0:
+                # Absolute position of the sampled token: lengths + n_new
+                # tokens precede it — the same (request, position) key the
+                # serialized engine derives (prefill first token: L;
+                # decode: lengths + 1), so sampling is bit-identical.
+                nxt = sample_tokens(row, seeds, lengths + n_new,
+                                    self.temperature, self.top_k)
+            else:
+                nxt = jnp.argmax(row, axis=-1).astype(jnp.int32)
+            bad = ~jnp.all(jnp.isfinite(row), axis=-1)
+            nxt = jnp.where(bad, jnp.int32(-1), nxt)
+            return nxt, new_caches
+
         # One compile per prefill shape — widths are max_len multiples and
         # packed row counts are padded to powers of two, so the set is small
         # and bounded — and exactly one for decode: shapes never depend on
@@ -416,6 +518,8 @@ class Engine:
         self._prefill_shared = jax.jit(prefill_shared_fn) \
             if self.prefix_share else None
         self._decode = jax.jit(decode_fn, donate_argnums=donate)
+        self._mixed = jax.jit(mixed_fn, donate_argnums=donate) \
+            if self.mixed else None
         if self.temperature > 0:
             t, tk = self.temperature, self.top_k
 
@@ -473,11 +577,19 @@ class Engine:
             req.status_reason = str(e)
             raise
         req._submit_clock = self._clock  # type: ignore[attr-defined]
+        req._submit_dev = self._device_time  # type: ignore[attr-defined]
+        req._submit_wall = time.perf_counter()  # type: ignore[attr-defined]
 
-    def run(self) -> List[Request]:
+    def run(self, arrivals: Optional[Sequence[Tuple[int, Request]]] = None
+            ) -> List[Request]:
         """Serve until queue and slots are empty; returns finished requests
         in completion order (every one carrying a terminal ``status``,
-        including requests shed/rejected at submit time)."""
+        including requests shed/rejected at submit time).
+
+        ``arrivals``: optional ``(tick, Request)`` pairs submitted when the
+        run-loop iteration count reaches ``tick`` — a deterministic,
+        replayable way to drive bursty mid-decode traffic into either
+        engine mode (the TTFT benchmark's workload contract)."""
         sl = self.slots
         # A FaultPlan replays from scratch every run (deterministic chaos);
         # an explicit FaultInjector instance persists across runs.
@@ -490,6 +602,14 @@ class Engine:
         cur = np.zeros(self.num_slots, np.int32)      # next input token
         emitted = np.zeros(self.num_slots, np.int32)  # tokens emitted so far
         budget = np.zeros(self.num_slots, np.int32)
+        # Mixed-step chunk state: pending[s] is the un-prefilled prompt
+        # suffix still to stream through slot s's chunk rows (None once
+        # prefill completes / for decode rows); pending_full[s] keeps the
+        # admitted prompt for the completion-time prefix publish.
+        pending: List[Optional[np.ndarray]] = [None] * self.num_slots
+        pending_full: List[Optional[np.ndarray]] = [None] * self.num_slots
+        arr = sorted(arrivals or [], key=lambda a: a[0])
+        ai = 0
         self._shared_tokens = 0   # prompt tokens served from shared pages
         self._prompt_tokens = 0   # prompt tokens admitted (incl. resumes)
         self._pages_shared = 0    # page mappings served from the cache
@@ -503,9 +623,12 @@ class Engine:
         preemptions = 0
         preempt_recovered = 0
         pages_used_steps = 0
+        mixed_steps = 0
+        chunk_tokens = 0  # fresh prompt tokens streamed via mixed steps
         idle = 0  # consecutive iterations with nothing decoded or admitted
 
-        while self.scheduler.pending() or sl.active.any():
+        while (self.scheduler.pending() or sl.active.any()
+               or ai < len(arr)):
             # Virtual clock: one tick per iteration, plus injected stall
             # ticks — so deadlines age deterministically even while the
             # queue is head-blocked with nothing decoding.
@@ -514,6 +637,12 @@ class Engine:
                 self._clock += inj.begin_step(iters, self.num_slots,
                                               sl.active)
             iters += 1
+            while ai < len(arr) and arr[ai][0] <= iters:
+                self.submit(arr[ai][1])
+                ai += 1
+            if self._terminal:  # shed/rejected by a mid-run arrival
+                done.extend(self._terminal)
+                self._terminal.clear()
             progressed = self._expire(done) > 0
             if inj is not None and inj.forced_preempt() and sl.active.any():
                 victims = np.flatnonzero(sl.active)
@@ -533,11 +662,24 @@ class Engine:
                 rec, esc = self._ensure_pages(done)
                 preemptions += rec + esc
                 preempt_recovered += rec
+            if self.mixed:
+                # Expiry / forced preemption / page growth above may have
+                # released mid-prefill slots: drop their chunk state.
+                for s in range(self.num_slots):
+                    if not sl.active[s]:
+                        pending[s] = None
+                        pending_full[s] = None
             if self.scheduler.pending():
                 free = sl.free_slots()
                 if free.size:
                     n_done = len(done)
-                    admitted = self._admit(free, cur, emitted, budget, done)
+                    if self.mixed:
+                        admitted = self._admit_mixed(
+                            free, cur, emitted, budget, pending,
+                            pending_full, done)
+                    else:
+                        admitted = self._admit(free, cur, emitted, budget,
+                                               done)
                     progressed |= admitted > 0 or len(done) > n_done
             active_ix = np.flatnonzero(sl.active)
             if self.audit:
@@ -558,6 +700,137 @@ class Engine:
                         idle = 0
                 continue
             idle = 0
+
+            if self.mixed and any(pending[s] is not None
+                                  for s in active_ix):
+                # ---- mixed step: pack up to ``prefill_budget`` fresh
+                # prompt tokens (chunk rows, oldest admission first —
+                # matching serialized FIFO prefill order) alongside every
+                # decode slot in ONE jitted fixed-shape call. Pure-decode
+                # iterations below keep the (B, 1) decode step — no chunk
+                # columns to pay for when nobody is prefilling.
+                S = self._chunk_width
+                left = self.prefill_budget
+                n_new = np.zeros(self.num_slots, np.int32)
+                order = sorted(active_ix,
+                               key=lambda s: self._admit_seq[s])
+                for s in order:
+                    if pending[s] is None:
+                        n_new[s] = 1  # decode row
+                    else:
+                        c = min(len(pending[s]), S)
+                        if left is not None:
+                            c = min(c, left)
+                            left -= c
+                        n_new[s] = c
+                # Chunk writes span [len, len + c): allocate + CoW each
+                # span (oldest first; dry pool preempts the youngest, like
+                # _ensure_pages — make_range_writable is all-or-nothing so
+                # the retry after eviction is safe).
+                for s in order:
+                    if (not sl.active[s] or pending[s] is None
+                            or n_new[s] <= 0):
+                        continue
+                    ok, rec, esc = self._grow_span(
+                        int(s), int(sl.lengths[s]) + int(n_new[s]), done)
+                    preemptions += rec + esc
+                    preempt_recovered += rec
+                    if not ok:
+                        # deferred (pool dry, this slot youngest): ride
+                        # this step as an inert row, chunk intact.
+                        n_new[s] = 0
+                for s in range(self.num_slots):
+                    if not sl.active[s]:
+                        pending[s] = None
+                        pending_full[s] = None
+                n_new = np.where(sl.active, n_new, 0).astype(np.int32)
+                active_ix = np.flatnonzero(sl.active)
+                if active_ix.size == 0:
+                    continue
+                toks = np.zeros((self.num_slots, S), np.int32)
+                for s in active_ix:
+                    if pending[s] is not None:
+                        c = int(n_new[s])
+                        toks[s, :c] = pending[s][:c]
+                    else:
+                        toks[s, 0] = cur[s]
+                for ring in self._attn_rings:
+                    bs = block_stats(
+                        np.where(sl.active,
+                                 np.minimum(sl.lengths + n_new, ring), 0),
+                        ring, min(self._block_k, ring))
+                    blocks_visited += bs["visited"]
+                    blocks_dense += bs["dense"]
+                    kv_bytes += (bs["visited"] * min(self._block_k, ring)
+                                 * self._ring_layers[ring]
+                                 * self._kv_token_bytes)
+                nan_mask = self._no_nan
+                if inj is not None:
+                    m = inj.nan_mask()
+                    if m is not None:
+                        nan_mask = jnp.asarray(m)
+                tables = sl.pool.device_tables()
+                nxt, sl.caches = self._mixed(
+                    self.params, jnp.asarray(toks), sl.caches,
+                    jnp.asarray(sl.lengths), jnp.asarray(n_new),
+                    jnp.asarray(sl.active), jnp.asarray(self._seeds),
+                    tables, nan_mask)
+                nxt = np.asarray(nxt)  # the step's single host sync
+                self._device_time += self._chunk_width
+                steps += 1
+                mixed_steps += 1
+                active_slot_steps += active_ix.size
+                if self.paged:
+                    pages_used_steps += sl.pool.pages_in_use()
+                for s in active_ix:
+                    tok = int(nxt[s])
+                    req = sl.request[s]
+                    if tok < 0:
+                        sl.release(int(s))
+                        pending[s] = None
+                        pending_full[s] = None
+                        self._finish(req, "failed",
+                                     "non-finite logits (NaN/Inf) in the "
+                                     "mixed step", done)
+                        continue
+                    if pending[s] is not None:
+                        c = int(n_new[s])
+                        if c <= 0:
+                            continue  # budget-starved: nothing this step
+                        sl.advance_n(int(s), c)
+                        chunk_tokens += c
+                        rest = pending[s][c:]
+                        if len(rest):
+                            # still mid-prefill: the sampled column is a
+                            # mid-prompt continuation, never an output
+                            pending[s] = rest
+                            continue
+                        # Prefill complete: ``tok`` IS the first token —
+                        # sampled from the same logits position (and, in
+                        # sampled mode, the same key) as the serialized
+                        # prefill's first token. Publish the prompt's full
+                        # pages now that they hold their final bytes.
+                        if self.prefix_share:
+                            sl.pool.publish_prefix(int(s), pending_full[s])
+                        pending[s] = None
+                        pending_full[s] = None
+                        req.output.append(tok)
+                        self._note_ttft(req)
+                        emitted[s] = len(req.output)
+                        cur[s] = tok
+                        if emitted[s] >= budget[s] or tok == self.eos_id:
+                            self._finish(req, "ok", None, done)
+                            sl.release(int(s))
+                        continue
+                    sl.advance(s)
+                    req.output.append(tok)
+                    emitted[s] += 1
+                    cur[s] = tok
+                    decoded_tokens += 1
+                    if emitted[s] >= budget[s] or tok == self.eos_id:
+                        self._finish(req, "ok", None, done)
+                        sl.release(s)
+                continue
 
             # Predicated-kernel work accounting: the TDA grid visits only
             # the kv blocks covering each active lane's occupancy (+1 for
@@ -587,6 +860,7 @@ class Engine:
                 jnp.asarray(sl.lengths), jnp.asarray(sl.active),
                 jnp.asarray(self._seeds), tables, nan_mask)
             nxt = np.asarray(nxt)  # the step's single host sync
+            self._device_time += 1
             steps += 1
             active_slot_steps += active_ix.size
             if self.paged:
@@ -671,6 +945,25 @@ class Engine:
             "audit_violations": self._audit_violations,
             "faults_injected": dict(inj.counts) if inj is not None else {},
             "clock_ticks": self._clock,
+            "device_time": self._device_time,
+            # Mixed-step accounting + per-request time-to-first-token:
+            # wall seconds since submit, deterministic clock ticks, and
+            # ``device_tokens`` — modeled device time (each jitted dispatch
+            # costs its sequence width; batch rows are free) between submit
+            # and the first token. ``device_tokens`` is the benchmark's
+            # gated ttft_p50/ttft_p99 sidecar source: deterministic and
+            # dispatch-shaped, where wall at smoke scale just measures host
+            # FLOPs and clock ticks hide whole-prompt admission sweeps.
+            "mixed": self.mixed,
+            "prefill_budget": self.prefill_budget,
+            "mixed_steps": mixed_steps,
+            "prefill_chunk_tokens": chunk_tokens,
+            "ttft": {
+                r.rid: {"wall_s": float(r._ttft_wall),
+                        "clock": int(r._ttft_clock),
+                        "device_tokens": int(getattr(r, "_ttft_dev", 0)),
+                        "first_token_clock": int(r._first_token_clock)}
+                for r in done if hasattr(r, "_ttft_wall")},
         }
         self._counts = {s: 0 for s in TERMINAL_STATUSES}
         self._inj = None
@@ -742,6 +1035,157 @@ class Engine:
                 if victim == s:
                     break
         return n_rec, n_esc
+
+    def _grow_span(self, s: int, end: int,
+                   done: List[Request]) -> Tuple[bool, int, int]:
+        """Make lane positions ``[lengths[s], end)`` writable for a mixed
+        step's chunk scatter: allocate the span's pages and copy-on-write
+        any the slot still shares. Same dry-pool policy as
+        :meth:`_ensure_pages` — preempt the youngest active request and
+        retry (both ``alloc_prefix`` and ``make_range_writable`` are
+        all-or-nothing, so a retry never observes half-applied state) —
+        with one refinement: when the youngest IS the growing slot and
+        others are still active, the chunk is **deferred** (``ok=False``,
+        slot keeps its pages and streamed prefix, the caller zeroes this
+        step's ``n_new``) instead of self-preempted — older requests
+        drain and free pages within their budgets, and a decoder that
+        genuinely needs a page still preempts this slot through
+        ``_ensure_pages``, so deferral cannot deadlock. The sole survivor
+        that still cannot grow is failed, not wedged. Returns ``(ok,
+        recovered, escalated)``."""
+        sl, pool = self.slots, self.slots.pool
+        inj = self._inj
+        n_rec = n_esc = 0
+        suppress = False
+        end = min(end, self.cache_len)
+        while True:
+            injected = (not suppress and inj is not None
+                        and inj.alloc_fail())
+            try:
+                if injected:
+                    raise RuntimeError("injected allocation failure")
+                pool.alloc_prefix(s, end)
+                copies = pool.make_range_writable(s, int(sl.lengths[s]),
+                                                  end)
+            except RuntimeError:
+                victims = np.flatnonzero(sl.active)
+                victim = int(max(victims,
+                                 key=lambda v: self._admit_seq[v]))
+                if victim == s:
+                    if victims.size == 1:
+                        if injected:
+                            suppress = True
+                            continue
+                        req = sl.request[s]
+                        sl.release(s)
+                        self._finish(
+                            req, "failed",
+                            "page pool cannot hold the prefill chunk "
+                            "span even with every other slot evicted "
+                            "(page_cap too small for the prompt)", done)
+                        n_esc += 1
+                    # else: defer — this slot is the youngest, so let the
+                    # older slots drain and retry the chunk next step
+                    # with the streamed prefix intact.
+                    return False, n_rec, n_esc
+                if self._preempt_or_fail(victim, done):
+                    n_rec += 1
+                else:
+                    n_esc += 1
+                continue
+            if copies:
+                sl.copy_pages(copies)
+            return True, n_rec, n_esc
+
+    def _note_ttft(self, target: Request) -> None:
+        """Record time-to-first-token the moment a request's FIRST output
+        token lands (continuations resume with prior output, so only a
+        genuine first token — len(output) == 1 — qualifies)."""
+        if len(target.output) != 1 or hasattr(target, "_ttft_wall"):
+            return
+        now = time.perf_counter()
+        target._ttft_wall = (  # type: ignore[attr-defined]
+            now - getattr(target, "_submit_wall", now))
+        target._ttft_clock = (  # type: ignore[attr-defined]
+            self._clock - getattr(target, "_submit_clock", self._clock))
+        target._first_token_clock = self._clock  # type: ignore[attr-defined]
+        target._ttft_dev = (  # type: ignore[attr-defined]
+            self._device_time - getattr(target, "_submit_dev",
+                                        self._device_time))
+
+    def _admit_mixed(self, free: np.ndarray, cur, emitted, budget,
+                     pending, pending_full, done: List[Request]) -> int:
+        """Chunk-granular admission for the mixed step: claim a free slot
+        per queued request (FIFO, page-budget head-blocking — but the
+        reservation covers only the FIRST chunk's span, so a long prompt
+        never head-blocks the queue behind its whole page demand) and
+        stage its prompt in ``pending`` for the chunk scheduler. No
+        prefill sweep, no lane copy: the mixed step writes chunk K/V
+        straight into the claimed lane. Prefix hits map their shared
+        pages immediately, so the chunks stream only the suffix."""
+        pool = self.slots.pool
+
+        def probe_len(req: Request) -> int:
+            hit = self._probe_req(req)
+            return hit.n_shared if hit is not None else 0
+
+        adms = self.scheduler.next_mixed(
+            len(free), reserve=self._page_reserve(chunk=self._chunk_width),
+            probe=probe_len if self.prefix_share else None)
+        fi = 0
+        n_processed = 0
+        for req, _est in adms:
+            n_processed += 1
+            target = getattr(req, "_origin", req)
+            total_budget = min(target.max_new_tokens, self.max_new)
+            if len(target.output) >= total_budget:
+                self._finish(target, "ok", None, done)  # nothing left
+                continue
+            prompt = np.asarray(req.prompt, np.int32)
+            hit = self._probe_req(req) if self.prefix_share else None
+            off = hit.n_shared if hit is not None else 0
+            self._prompt_tokens += len(prompt)
+            self._shared_tokens += off
+            slot = int(free[fi])
+            fi += 1
+            if off:
+                pool.map_shared(slot, hit)
+                self._pages_shared += sum(
+                    len(v) for v in hit.pages.values())
+            self.slots.claim(slot, target, off)
+            try:
+                # Hold the first chunk's write position now (private,
+                # CoW'd out of any shared tail page) so the per-iteration
+                # audit's write-target invariant holds from claim on.
+                pool.alloc_prefix(slot, min(off + 1, self.cache_len))
+                copies = pool.make_range_writable(slot, off, off + 1) \
+                    if off else []
+            except RuntimeError:
+                # Reservation makes this unreachable in normal operation;
+                # degrade to a requeue rather than wedge the round.
+                self.slots.release(slot)
+                self.scheduler.requeue(req)
+                break
+            if copies:
+                self.slots.copy_pages(copies)
+            pending[slot] = prompt[off:]
+            pending_full[slot] = prompt
+            seed = np.uint32(
+                (target.seed if target.seed is not None
+                 else self._base_seed + target.rid) & 0xFFFFFFFF)
+            cur[slot] = 0  # unused until the first token lands
+            emitted[slot] = len(target.output)
+            budget[slot] = total_budget
+            self._seeds[slot] = seed
+            self._admit_seq[slot] = self._seq
+            self._seq += 1
+        if n_processed:
+            # One stats entry per admission round: chunk rows carry no
+            # padding, so the legacy "prefill utilization" is 1 by
+            # construction (rows=0 flags the sweepless mixed path).
+            self.stats.append({"rows": 0, "n_requests": n_processed,
+                               "utilization": 1.0})
+        return n_processed
 
     # ------------------------------------------------------------------
     # failure hardening: lifecycle, deadlines, watchdog, audits
@@ -892,7 +1336,7 @@ class Engine:
         req._probe_memo = (pool, ver, hit)  # type: ignore[attr-defined]
         return hit
 
-    def _page_reserve(self):
+    def _page_reserve(self, chunk: Optional[int] = None):
         """Admission-control closure over the page budget, accounting for
         expected prefix-cache hits: a request with a resident prefix
         reserves only its *new* pages — lane pages minus shared ones, plus
@@ -901,7 +1345,15 @@ class Engine:
         those stop being evictable the moment it maps them. Budgets are
         per width class over ``free + retained`` (retained pages are
         evictable on demand), so admission never overcommits even when an
-        earlier admission in the same round evicts a probed page."""
+        earlier admission in the same round evicts a probed page.
+
+        ``chunk`` (mixed admission) caps the reserved span at the first
+        prefill chunk: the mixed engine grows lanes page-by-page per step
+        — preempting the youngest when the pool runs dry, exactly like
+        mid-decode growth — so a long prompt does not head-block the FIFO
+        behind its *whole* page demand the way a serialized admission
+        sweep must. ``submit`` still rejects prompts no pool state could
+        ever hold."""
         pool = self.slots.pool
         ps = pool.page_size
         avail = {w: c.available() for w, c in pool.classes.items()}
@@ -910,18 +1362,20 @@ class Engine:
             if self._inj is not None and self._inj.alloc_fail():
                 return False  # injected pool failure: head-block this round
             L = len(req.prompt)
+            span = L if chunk is None else min(L, chunk)
             hit = self._probe_req(req)
             consume = {}
             for w, c in pool.classes.items():
-                need = -(-min(L + 1, c.width) // ps)
+                need = -(-min(span + 1, c.width) // ps)
                 if hit is not None:
                     shared = -(-hit.n_shared // ps)
                     writes = {(p % c.width) // ps
-                              for p in range(hit.n_shared, L + 1)}
+                              for p in range(min(hit.n_shared, span),
+                                             span + 1)}
                     cow = sum(1 for lp in writes if lp < shared)
                     r0 = sum(1 for pg in hit.pages[w]
                              if c.refcount[pg] == 0)
-                    consume[w] = need - shared + cow + r0
+                    consume[w] = max(0, need - shared) + cow + r0
                 else:
                     consume[w] = need
             if any(n > avail[w] for w, n in consume.items()):
@@ -974,7 +1428,7 @@ class Engine:
         n_processed = 0
         for adm in groups:
             n_processed += len(adm.requests)
-            logits, caches, slots_of, hit = self._prefill_admission(adm)
+            logits, caches, slots_of, hits = self._prefill_admission(adm)
             logits = np.asarray(logits)
             assigns = []  # whole group lands in ONE fused lane copy
             pubs = []     # (slot, full token sequence) to publish
@@ -1005,6 +1459,7 @@ class Engine:
                 else:
                     first = int(np.argmax(logits[row, start + length - 1]))
                 target.output.append(first)
+                self._note_ttft(target)
                 if len(target.output) >= total_budget or first == self.eos_id:
                     # finished at prefill; slot stays free
                     self._finish(target, "ok", None, done)
@@ -1014,9 +1469,9 @@ class Engine:
                 if off:
                     # Point the fresh lane's block tables at the shared
                     # pages before assign_many allocates the remainder.
-                    pool.map_shared(slot, hit)
+                    pool.map_shared(slot, hits[i])
                     self._pages_shared += sum(
-                        len(v) for v in hit.pages.values())
+                        len(v) for v in hits[i].pages.values())
                 assigns.append((slot, target, row, start, length, off))
                 if self.prefix_share:
                     pubs.append((slot, req.prompt))
@@ -1035,30 +1490,37 @@ class Engine:
 
     def _prefill_admission(self, adm: Admission):
         """Run one prefill sweep; returns (all-position logits, filled
-        caches, per-request (row, start, length, offset), prefix hit).
-        ``offset`` is nonzero only for a shared-prefix admission: the
-        request's first ``offset`` tokens came from mapped pages and only
-        the suffix rode the sweep."""
-        hit = None
+        caches, per-request (row, start, length, offset), per-request
+        prefix hits). ``offset`` is nonzero only for a shared-prefix row:
+        that request's first ``offset`` tokens came from mapped pages and
+        only its suffix rode the sweep."""
         if adm.shared_prefix:
-            # Re-probe at prefill time: the scheduler's estimate may be
+            # Re-probe at prefill time: the scheduler's estimates may be
             # stale (pages evicted since) or short (pages published by an
-            # earlier group this round). A full miss degrades to a cold
-            # solo prefill below. (The memo makes this free while the
-            # prefix index is unchanged.)
-            req = adm.requests[0]
-            hit = self._probe_req(req)
-            if hit is not None:
-                batch, ids, suf = self._shared_batch(req, hit)
+            # earlier group this round). Stale rows simply ride the same
+            # sweep as cold rows with a zero-length prefix. (The memo
+            # makes re-probing free while the prefix index is unchanged.)
+            reqs = adm.requests
+            hits = [self._probe_req(r) for r in reqs]
+            if len(reqs) == 1 and hits[0] is None:
+                # Solo full miss: degrade to a cold chunked prefill (the
+                # legacy path; nothing to gather).
+                adm = Admission(requests=reqs,
+                                chunks=chunk_prompt(reqs[0].prompt,
+                                                    self.max_len))
+            else:
+                batch, ids, plen, slots_of = self._shared_batch_many(
+                    reqs, hits)
                 pk, pv = self.slots.gather_prefix(ids)
                 logits, caches = self._prefill_shared(
-                    self.params, batch, pk, pv, jnp.int32(hit.n_shared))
-                width = batch["inputs"].shape[1]
-                self.stats.append({"rows": 1, "n_requests": 1,
-                                   "utilization": suf / width})
-                return logits, caches, [(0, 0, suf, hit.n_shared)], hit
-            adm = Admission(requests=[req],
-                            chunks=chunk_prompt(req.prompt, self.max_len))
+                    self.params, batch, pk, pv, plen)
+                rows, width = batch["inputs"].shape
+                self._device_time += width
+                self.stats.append({
+                    "rows": len(reqs), "n_requests": len(reqs),
+                    "utilization": (sum(l for _, _, l, _ in slots_of)
+                                    / max(rows * width, 1))})
+                return logits, caches, slots_of, hits
         if adm.packed is not None:
             packed = adm.packed
             rows = packed.rows
@@ -1088,40 +1550,59 @@ class Engine:
         else:  # row-per-request (recurrent stacks), right-aligned
             batch, slots_of, rows = self._rows_batch(adm)
         logits, caches = self._prefill(self.params, batch)
+        self._device_time += int(batch["inputs"].shape[1])
         self.stats.append({"rows": rows, "n_requests": len(adm.requests),
                            "utilization": adm.utilization})
-        return logits, caches, slots_of, None
+        return logits, caches, slots_of, [None] * len(adm.requests)
 
-    def _shared_batch(self, req: Request, hit: PrefixHit):
-        """Solo suffix-prefill layout: the row carries tokens
-        ``prompt[n_shared:]`` at absolute positions, padded to a
-        ``max_len`` multiple; the prefix rides as padded per-class page-id
-        arrays for :meth:`SlotKVCache.gather_prefix` (padding clamps to
-        garbage pages the sweep masks via segment ids). Both paddings
-        bound the set of compiled suffix shapes."""
+    def _shared_batch_many(self, reqs: List[Request],
+                           hits: List[Optional[PrefixHit]]):
+        """Batched suffix-prefill layout: one row per request, each with
+        its OWN resident prefix — row i carries tokens
+        ``prompt[n_i:]`` at absolute positions (``n_i = 0`` for stale
+        probes: a cold row in the same sweep), padded to the widest
+        suffix's ``max_len`` multiple; rows pad to a power of two (padding
+        rows are fully masked via segment ids). The prefixes ride as
+        2-D per-class page-id arrays for
+        :meth:`SlotKVCache.gather_prefix` (``FREE`` padding clamps to
+        garbage the sweep masks) plus the per-row prefix lengths the
+        layers' ``prefix_kv`` masking broadcasts over. All paddings bound
+        the set of compiled suffix shapes. Returns
+        ``(batch, ids, plen, slots_of)``."""
         pool = self.slots.pool
-        prompt = np.asarray(req.prompt, np.int32)
-        L, n = len(prompt), hit.n_shared
-        suf = L - n
-        width = -(-suf // self.max_len) * self.max_len
-        tokens = np.zeros((1, width), np.int32)
-        seg = np.zeros((1, width), np.int32)
-        pos = np.zeros((1, width), np.int32)
-        tokens[0, :suf] = prompt[n:]
-        seg[0, :suf] = 1
-        pos[0, :suf] = np.arange(n, L, dtype=np.int32)
+        ns = [h.n_shared if h is not None else 0 for h in hits]
+        prompts = [np.asarray(r.prompt, np.int32) for r in reqs]
+        sufs = [len(p) - n for p, n in zip(prompts, ns)]
+        width = max(-(-s // self.max_len) * self.max_len for s in sufs)
+        R = len(reqs)
+        pad_rows = 1 << (R - 1).bit_length()
+        tokens = np.zeros((pad_rows, width), np.int32)
+        seg = np.zeros((pad_rows, width), np.int32)
+        pos = np.zeros((pad_rows, width), np.int32)
+        slots_of = []
+        for i, (prompt, n, suf) in enumerate(zip(prompts, ns, sufs)):
+            tokens[i, :suf] = prompt[n:]
+            seg[i, :suf] = 1
+            pos[i, :suf] = np.arange(n, len(prompt), dtype=np.int32)
+            slots_of.append((i, 0, suf, n))
         batch = {"inputs": jnp.asarray(tokens),
                  "positions": jnp.asarray(pos),
                  "seg_ids": jnp.asarray(seg)}
-        np_pad = -(-n // self.max_len) * self.max_len  # padded prefix len
+        # Padded prefix width: the widest row's prefix, floored at one
+        # max_len block so an all-stale group still traces a valid shape.
+        np_pad = max(max(-(-n // self.max_len) * self.max_len
+                         for n in ns), self.max_len)
         n_pages = -(-np_pad // pool.page_size)
         ids = {}
-        for w, pages in hit.pages.items():
-            c = pool.classes[w]
-            padded = np.full(n_pages, c.FREE, np.int32)
-            padded[:len(pages)] = pages
+        for w, c in pool.classes.items():
+            padded = np.full((pad_rows, n_pages), c.FREE, np.int32)
+            for i, h in enumerate(hits):
+                if h is not None:
+                    padded[i, :len(h.pages[w])] = h.pages[w]
             ids[w] = padded
-        return batch, ids, suf
+        plen = np.zeros(pad_rows, np.int32)
+        plen[:R] = ns
+        return batch, ids, jnp.asarray(plen), slots_of
 
     def _rows_batch(self, adm: Admission):
         """Row-per-request prefill layout for stacks with recurrent state:

@@ -447,9 +447,11 @@ class SlotKVCache:
         """Materialize a dense, dequantized prefix-KV view out of the page
         pool for a suffix prefill: ``page_ids`` maps each width class to a
         padded int32 array of physical pages (``FREE``-padded entries
-        clamp to garbage the prefill masks via its segment ids). Returns
-        ``(pk, pv)`` pytrees shaped like per-layer ``(L?, 1, n_pages *
-        page_size, Hkv, D)`` attention memories."""
+        clamp to garbage the prefill masks via its segment ids). 1-D ids
+        ``(n_pages,)`` produce batch-1 views ``(L?, 1, n_pages *
+        page_size, Hkv, D)``; 2-D ids ``(R, n_pages)`` (a batched suffix
+        sweep — one prefix per row) produce ``(L?, R, n_pages *
+        page_size, Hkv, D)``."""
         ids = {w: jnp.asarray(v, jnp.int32) for w, v in page_ids.items()}
         return self._prefix_gather(self.caches, ids)
 
@@ -462,8 +464,17 @@ class SlotKVCache:
             if not w:
                 return None, None  # state-lane layer: sharing is gated off
             page_ix = jnp.clip(ids[w], 0, self.pool.classes[w].num_pages - 1)
+            batched = page_ix.ndim == 2  # (R, n): one prefix per row
 
             def lanes(name):
+                if batched:
+                    # (L?, R, n, ps, ..) -> (L?, R, n * ps, ..): the row
+                    # axis IS the batch axis of the suffix sweep.
+                    leaf = jnp.take(d[name], page_ix, axis=ba)
+                    sh = leaf.shape
+                    return leaf.reshape(sh[:ba + 1]
+                                        + (sh[ba + 1] * sh[ba + 2],)
+                                        + sh[ba + 3:])
                 leaf = jnp.take(d[name], page_ix, axis=ba)  # (L?, n, ps, ..)
                 sh = leaf.shape
                 leaf = leaf.reshape(sh[:ba] + (sh[ba] * sh[ba + 1],)
@@ -483,10 +494,32 @@ class SlotKVCache:
             out_k[name], out_v[name] = block(d, self.widths[name])
         return out_k, out_v
 
+    def claim(self, slot: int, request, length: int = 0) -> None:
+        """Claim ``slot`` for ``request`` without copying any lane state
+        (mixed-step chunked prefill: the model writes the chunk K/V
+        straight into the slot's paged lane, so there is no prefill cache
+        to gather from). ``length`` is the lane depth already resident —
+        0 for a cold admission, ``n_shared`` when the engine mapped a
+        shared prefix into the lane first."""
+        if self.active[slot]:
+            raise ValueError(f"slot {slot} is already occupied")
+        if length > self.cache_len:
+            raise ValueError(f"claim length {length} exceeds cache_len "
+                             f"{self.cache_len}")
+        self.active[slot] = True
+        self.lengths[slot] = length
+        self.request[slot] = request
+
     def advance(self, slot: int) -> None:
         """One decoded token was written into the lane at ``lengths[slot]``
         (``% ring`` for ring lanes; recurrent lanes updated in place)."""
         self.lengths[slot] += 1
+
+    def advance_n(self, slot: int, n: int) -> None:
+        """``n`` chunk tokens were written into the lane at positions
+        ``[lengths[slot], lengths[slot] + n)`` (``% ring`` for ring lanes)
+        by a mixed step."""
+        self.lengths[slot] += n
 
     def release(self, slot: int) -> None:
         self.active[slot] = False

@@ -418,13 +418,18 @@ class PagePool:
 
     def make_range_writable(self, slot: int, start: int,
                             end: int) -> List[PageCopy]:
-        """Make every position in ``[start, end)`` writable (assign-time
-        form, used before the fused suffix copy writes ``[off, total]``):
+        """Make every position in ``[start, end)`` writable (span form,
+        used before the fused suffix copy writes ``[off, total]`` and
+        before a mixed-step chunk scatter writes ``[len, len + n_new]``):
         CoW shared pages and unpublish sole-owner published ones. Pages
-        must already be mapped (``map_shared`` + ``alloc_prefix`` ran);
-        raises ``RuntimeError`` if a CoW target cannot be obtained, like
-        :meth:`alloc_prefix` (same page-budget guarantee)."""
-        copies: List[PageCopy] = []
+        must already be mapped (``map_shared`` + ``alloc_prefix`` ran).
+        All-or-nothing like :meth:`alloc_prefix`: a ``RuntimeError`` (a
+        CoW target cannot be obtained) changes nothing, so the caller may
+        preempt a victim and retry — a partially CoW'd span would leave
+        fresh pages whose device copy never ran and a retry would skip
+        them (refcount already 1), silently reading garbage."""
+        plan: List[Tuple[PageClass, int, int]] = []  # (class, lp, shared)
+        need: Dict[int, int] = {}
         for c in self.classes.values():
             lps = sorted({(p % c.width) // self.page_size
                           for p in range(start, end)})
@@ -433,17 +438,29 @@ class PagePool:
                 if entry == c.FREE:
                     raise RuntimeError("write range not allocated")
                 if c.refcount[entry] > 1:
-                    pg = self._take_page(c)
-                    if pg is None:
-                        raise RuntimeError(
-                            f"page pool exhausted: class width={c.width} "
-                            "has no page for copy-on-write")
-                    c.table[slot, lp] = pg
-                    c.refcount[pg] = 1
-                    c.refcount[entry] -= 1
-                    copies.append((c.width, entry, pg))
-                    self._dev = None
-                elif entry in c.published:
+                    plan.append((c, lp, entry))
+                    need[c.width] = need.get(c.width, 0) + 1
+        for c in self.classes.values():
+            if need.get(c.width, 0) > c.available():
+                raise RuntimeError(
+                    f"page pool exhausted: class width={c.width} needs "
+                    f"{need[c.width]} pages for copy-on-write, "
+                    f"{c.available()} obtainable")
+        copies: List[PageCopy] = []
+        for c, lp, entry in plan:
+            pg = self._take_page(c)
+            assert pg is not None  # guarded by the per-class check above
+            c.table[slot, lp] = pg
+            c.refcount[pg] = 1
+            c.refcount[entry] -= 1
+            copies.append((c.width, entry, pg))
+            self._dev = None
+        for c in self.classes.values():  # sole-owner writes: unpublish
+            lps = sorted({(p % c.width) // self.page_size
+                          for p in range(start, end)})
+            for lp in lps:
+                entry = int(c.table[slot, lp])
+                if c.refcount[entry] == 1 and entry in c.published:
                     self._unpublish(c, entry)
         return copies
 

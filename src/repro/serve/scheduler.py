@@ -88,11 +88,13 @@ class Admission:
       stacks, where segment masking makes packing exact).
     * ``chunks`` — a solo long prompt whose ``chunks`` concatenate back to
       the full prompt and whose prefill width is ``len(chunks) * max_len``.
-    * ``shared_prefix > 0`` — a solo request whose first ``shared_prefix``
-      prompt tokens are resident in the paged prefix cache
-      (``serve/pages.py``): the engine maps the shared pages and prefills
-      only the suffix. Solo because a packed row cannot give each segment
-      its own prefix-KV memory.
+    * ``shared_prefix > 0`` — request(s) whose leading prompt tokens are
+      resident in the paged prefix cache (``serve/pages.py``): the engine
+      maps the shared pages and prefills only each suffix. One request per
+      row (a packed row cannot give each segment its own prefix-KV
+      memory), but *several hit requests with distinct prefixes share one
+      sweep* — ``shared_prefixes[i]`` is request i's own estimate and
+      ``shared_prefix`` the max (legacy single-hit consumers).
     * neither (``row_width`` set) — one request per row, emitted by a
       no-pack scheduler (recurrent stacks: the prefill cache stores only
       each row's end-of-sequence state, so requests cannot share a row; the
@@ -104,6 +106,9 @@ class Admission:
     chunks: Optional[List[np.ndarray]] = None
     row_width: Optional[int] = None  # row-per-request layout width
     shared_prefix: int = 0  # prefix tokens expected to come from the cache
+    # per-request prefix estimates for a batched shared sweep (len ==
+    # len(requests) when set; entries may be 0 if a hit went stale)
+    shared_prefixes: Optional[List[int]] = None
 
     @property
     def utilization(self) -> float:
@@ -191,11 +196,14 @@ class Scheduler:
 
         ``probe`` (prefix sharing): callable returning the number of a
         request's leading prompt tokens resident in the prefix cache.
-        Requests with a hit are emitted as **solo** admissions
-        (``shared_prefix`` set) — a packed row cannot give each segment
-        its own prefix-KV memory — and the engine re-probes at prefill
-        time, so a stale estimate only costs packing efficiency, never
-        correctness.
+        Requests with a hit ride row-per-request **shared** admissions
+        (``shared_prefix``/``shared_prefixes`` set) — a packed row cannot
+        give each segment its own prefix-KV memory, but hit requests
+        *adjacent in admission order* batch into one multi-row suffix
+        sweep (short non-hits never break adjacency: they reorder into
+        the trailing packed group anyway). The engine re-probes at
+        prefill time, so a stale estimate only costs packing efficiency,
+        never correctness.
         """
         def fits(req: Request) -> bool:
             return reserve is None or reserve(req)
@@ -212,15 +220,31 @@ class Scheduler:
             return [Admission(requests=reqs, row_width=width)]
         groups: List[Admission] = []
         shorts: List[Request] = []
+        hits: List[Request] = []
+        hit_ns: List[int] = []
+
+        def flush_hits() -> None:
+            if hits:
+                groups.append(Admission(requests=list(hits),
+                                        shared_prefix=max(hit_ns),
+                                        shared_prefixes=list(hit_ns)))
+                hits.clear()
+                hit_ns.clear()
+
         taken = 0
         while self.queue and taken < free_slots and fits(self.queue[0]):
             req = self.queue[0]
             shared = probe(req) if probe is not None else 0
             if shared > 0:
                 self.queue.pop(0)
-                groups.append(Admission(requests=[req],
-                                        shared_prefix=shared))
+                hits.append(req)
+                hit_ns.append(shared)
+                if len(hits) >= self.max_rows:
+                    flush_hits()
             elif len(req.prompt) > self.policy.max_len:
+                # A solo chunked prefill sits between two hit groups in
+                # admission order, so the buffered hits flush first.
+                flush_hits()
                 self.queue.pop(0)
                 groups.append(Admission(
                     requests=[req],
@@ -228,6 +252,7 @@ class Scheduler:
             else:
                 shorts.append(self.queue.pop(0))
             taken += 1
+        flush_hits()
         if shorts:
             packed = pack_requests([r.prompt for r in shorts], self.policy)
             while packed.rows > self.max_rows and len(shorts) > 1:
@@ -235,6 +260,27 @@ class Scheduler:
                 packed = pack_requests([r.prompt for r in shorts], self.policy)
             groups.append(Admission(requests=shorts, packed=packed))
         return groups
+
+    def next_mixed(self, free_slots: int, reserve=None,
+                   probe=None) -> List:
+        """Chunk-granular admissions for the mixed-step engine: pop up to
+        ``free_slots`` queue-head requests that ``reserve`` accepts and
+        return ``[(request, shared_estimate), ...]`` — no prefill layout
+        at all. The mixed engine claims a slot per request and streams the
+        prompt through per-step chunk columns of the jitted mixed step, so
+        there are no rows to pack and no chunk list to build; prompt
+        length no longer factors into *how* a request is admitted, only
+        into how many steps it takes to finish prefilling. Same FIFO
+        head-blocking contract as :meth:`next_admissions` (deterministic
+        admission sequence), same ``probe`` semantics (estimate only; the
+        engine re-probes)."""
+        out: List = []
+        while (self.queue and len(out) < free_slots
+               and (reserve is None or reserve(self.queue[0]))):
+            req = self.queue.pop(0)
+            shared = probe(req) if probe is not None else 0
+            out.append((req, shared))
+        return out
 
     # ------------------------------------------------------------------
     # legacy DynamicBatcher drain interface

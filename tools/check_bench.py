@@ -38,6 +38,16 @@ the offending key named:
     ``sharded.kv_bytes_per_token / sharded.tp_ranks`` (0.1% tolerance) —
     each rank streams only its KV-head slice of every visited page, so
     per-rank traffic scales 1/N with the mesh.
+  * ``mixed.tokens_match`` is true — interleaving chunked prefill with
+    decode in one jitted step never changes a token vs the
+    phase-serialized engine on the same bursty arrival schedule.
+  * ``mixed.slot_utilization`` >= ``mixed.slot_utilization_serialized``
+    and ``mixed.ttft_p99`` < ``mixed.ttft_p99_serialized`` — the
+    interleaved engine keeps slots busier and bounds worst-case
+    time-to-first-token (modeled device tokens: every jitted dispatch
+    costs its sequence width, batch rows ride idle PE lanes free) below
+    the whole-prompt-sweep baseline, whose solo admission sweeps each
+    burn a full prompt's width of device time head-of-line.
 * ``BENCH_decode_attn.json``
   * ``kv_block_ratio`` < 0.7 — the TDA kernel's predicated grid visits
     blocks in proportion to occupancy, not capacity.
@@ -110,6 +120,22 @@ GATES = [
      <= 1e-3 * rec["sharded"]["kv_bytes_per_token"],
      "== sharded.kv_bytes_per_token / tp_ranks within 0.1% (per-rank KV "
      "traffic scales 1/N: each rank streams only its head-slice)"),
+    ("BENCH_decode.json", "mixed.tokens_match",
+     lambda v, rec: v is True, "True (the interleaved mixed-step engine "
+     "emits the phase-serialized token streams verbatim on the bursty "
+     "workload)"),
+    ("BENCH_decode.json", "mixed.slot_utilization",
+     lambda v, rec: v >= rec["mixed"]["slot_utilization_serialized"],
+     ">= mixed.slot_utilization_serialized (chunk rows keep prefill "
+     "steps fully occupied; interleaving must not lose occupancy)"),
+    ("BENCH_decode.json", "mixed.ttft_p99",
+     lambda v, rec: v < rec["mixed"]["ttft_p99_serialized"],
+     "< mixed.ttft_p99_serialized (bounded-width chunk steps beat "
+     "head-of-line blocking behind whole-prompt admission sweeps, in "
+     "modeled device tokens)"),
+    ("BENCH_decode.json", "mixed.mixed_steps",
+     lambda v, rec: v > 0, "> 0 (the mixed row actually ran interleaved "
+     "steps, not a silent serialized fallback)"),
     ("BENCH_decode_attn.json", "kv_block_ratio",
      lambda v, rec: v < 0.7, "< 0.7 (predicated TDA grid vs dense sweep)"),
 ]

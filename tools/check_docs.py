@@ -75,6 +75,15 @@ REQUIRED_ANCHORS = [
     ("serving.md", "decode/sharded"),
     ("README.md", "decode/sharded"),
     ("README.md", "| Mesh |"),
+    # mixed-step contract: the interleaved-chunked-prefill section, the
+    # budget knob, the device-token TTFT metric, the tracked bench row,
+    # and the README map row
+    ("serving.md", "Interleaved chunked prefill"),
+    ("serving.md", "prefill_budget"),
+    ("serving.md", "device_tokens"),
+    ("serving.md", "decode/mixed"),
+    ("README.md", "decode/mixed"),
+    ("README.md", "prefill_budget"),
 ]
 
 PATH_RE = re.compile(
