@@ -579,6 +579,81 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
     sr_s, sr_t, sr, sr_tt, sr_w = run_bursty(False)
     tok_x = sum(len(v) for v in sr_t.values())
 
+    # ---- trace-driven SLO benchmark: the async front-end (and a
+    # 2-replica dispatcher fleet) replay ONE deterministic traffic trace
+    # — steady Poisson arrivals followed by bursty waves, two-mode
+    # prompt/output length mixtures, half the requests carrying
+    # per-request SamplingParams — against the synchronous engine.
+    # check_bench gates byte-identical tokens for both drivers plus the
+    # SLO metrics: ttft_p99 / itl_p99 in modeled device tokens (same
+    # accounting as the mixed row) and goodput-under-SLO — the fraction
+    # of requests finishing ok within BOTH latency budgets — strictly
+    # positive. float32 config: the gate is exact token identity.
+    import asyncio
+    from dataclasses import replace as _dc_replace
+
+    from benchmarks.traces import (build_arrivals, bursty_trace,
+                                   poisson_trace)
+    from repro.serve import Dispatcher, EngineConfig, Frontend
+
+    ps_t = poisson_trace(14, seed=21, mean_gap=2.0)
+    wave0 = max(s.tick for s in ps_t) + 6
+    specs_t = ps_t + [_dc_replace(s, tick=s.tick + wave0)
+                      for s in bursty_trace(2, 5, seed=22, gap_ticks=10)]
+    tcfg = EngineConfig(max_len=ml_x, max_new_tokens=16, num_slots=ns_x,
+                        decode_block_k=32, page_size=8, prefix_share=False,
+                        max_prompt_len=512, mixed=True)
+
+    def trace_arrivals():
+        return build_arrivals(specs_t, cfg_x.vocab_size, seed=31, rid0=600)
+
+    eng_t = Engine(model_x, params_x, config=tcfg)
+    ref_td = eng_t.run(arrivals=trace_arrivals())
+    ref_tok = {r.rid: tuple(r.output) for r in ref_td}
+    tok_t = sum(len(v) for v in ref_tok.values())
+
+    async def drive_trace(engine):
+        fe = Frontend(engine)
+        await fe.start()
+        for t, r in trace_arrivals():
+            fe.submit(r, tick=t)
+        await fe.stop()
+        return fe
+
+    eng_a = Engine(model_x, params_x, config=tcfg)
+    asyncio.run(drive_trace(eng_a))  # compile
+    t0 = time.perf_counter()
+    fe_t = asyncio.run(drive_trace(eng_a))
+    tr_s = time.perf_counter() - t0
+    fe_tok = {r.rid: tuple(r.output) for r in fe_t.results}
+    tr = fe_t.stats
+    ttft_dev_t = sorted(v["device_tokens"] for v in tr["ttft"].values())
+
+    # goodput under SLO: a request counts iff it finished ok AND met the
+    # TTFT budget AND every inter-token gap met the ITL budget (modeled
+    # device tokens; budgets generous enough that a healthy engine keeps
+    # goodput well above the gated floor of "strictly positive").
+    slo_ttft, slo_itl = 1500.0, 400.0
+
+    def meets_slo(r):
+        info = tr["ttft"].get(r.rid)
+        if r.status != "ok" or info is None:
+            return False
+        stamps = getattr(r, "_token_dev", [])
+        gaps = [b - a for a, b in zip(stamps, stamps[1:])]
+        return (info["device_tokens"] <= slo_ttft
+                and (max(gaps) if gaps else 0) <= slo_itl)
+
+    good_t = [r for r in fe_t.results if meets_slo(r)]
+
+    reps_t = [Engine(model_x, params_x, config=tcfg) for _ in range(2)]
+    disp_t = Dispatcher(reps_t)
+    t0 = time.perf_counter()
+    rp_done = disp_t.run(arrivals=trace_arrivals())
+    rp_s = time.perf_counter() - t0
+    rp_tok = {r.rid: tuple(r.output) for r in rp_done}
+    rp = disp_t.decode_stats
+
     ARTIFACTS["decode"] = {
         "tokens_per_s": useful / ct_s,
         "tokens_per_s_lockstep": useful / ls_s,
@@ -669,6 +744,36 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
             "prefill_budget": mx["prefill_budget"],
             "n_requests": len(spec_x),
         },
+        # tracked trace gates (tools/check_bench.py): the async
+        # front-end AND the 2-replica fleet must replay the trace
+        # byte-identically to the synchronous engine, the latency
+        # percentiles must be present and positive (a zero means the
+        # device-token stamps stopped flowing), and goodput-under-SLO
+        # must be strictly positive.
+        "trace": {
+            "tokens_match": fe_tok == ref_tok,
+            "tokens_match_replicas": rp_tok == ref_tok,
+            "n_requests": len(specs_t),
+            "completed_ok": tr["completed_ok"],
+            "decoded_tokens": tr["decoded_tokens"],
+            "ttft_p50": float(np.percentile(ttft_dev_t, 50)),
+            "ttft_p99": float(np.percentile(ttft_dev_t, 99)),
+            "itl_p50": tr["itl_p50"],
+            "itl_p99": tr["itl_p99"],
+            "slo_ttft_device_tokens": slo_ttft,
+            "slo_itl_device_tokens": slo_itl,
+            "goodput_slo": len(good_t) / max(len(fe_t.results), 1),
+            "goodput_requests": len(good_t),
+            "tokens_per_s": tok_t / tr_s,
+            "tokens_per_s_replicas": tok_t / rp_s,
+            "replicas": {
+                "routed_counts": rp["routed_counts"],
+                "device_time": rp["device_time"],
+                "itl_p50": rp["itl_p50"],
+                "itl_p99": rp["itl_p99"],
+                "slot_utilization": rp["slot_utilization"],
+            },
+        },
     }
     return [
         ("decode/lockstep", ls_s * 1e6,
@@ -717,6 +822,15 @@ def bench_decode(n_requests: int = 24, num_slots: int = 8) -> List[Row]:
          f"{np.percentile(sr_tt, 99):.0f} device-tokens "
          f"tokens_match={mx_t == sr_t} "
          f"(bursty long-prompt arrivals, chunk width {ml_x})"),
+        ("decode/trace", tr_s * 1e6,
+         f"async front-end over {len(specs_t)} traced requests: "
+         f"ttft_p99={np.percentile(ttft_dev_t, 99):.0f} "
+         f"itl_p99={tr['itl_p99']:.0f} device-tokens "
+         f"goodput_slo={len(good_t) / max(len(fe_t.results), 1):.2f} "
+         f"tokens_match={fe_tok == ref_tok} "
+         f"2-replica match={rp_tok == ref_tok} "
+         f"routed={rp['routed_counts']} "
+         f"(Poisson + bursty waves, mixed greedy/sampled)"),
         ("decode/compressed", cm_s * 1e6,
          f"bytes/tok={cm['bytes_per_token']:.0f} vs dense "
          f"{fd['bytes_per_token']:.0f} "

@@ -27,7 +27,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.data import request_lengths
 from repro.models.transformer import Model
-from repro.serve import Engine, FaultPlan, Request, TERMINAL_STATUSES
+from repro.serve import (Engine, EngineConfig, FaultPlan, Request,
+                         TERMINAL_STATUSES)
 
 
 def main():
@@ -40,8 +41,9 @@ def main():
     # demonstrates packed prefill sweeps (`eng.stats`), which the default
     # mixed step replaces with chunk rows (the last section compares the
     # two head-to-head).
-    eng = Engine(model, params, max_len=64, max_new_tokens=8, num_slots=8,
-                 page_size=16, mixed=False)
+    eng = Engine(model, params, config=EngineConfig(
+        max_len=64, max_new_tokens=8, num_slots=8, page_size=16,
+        mixed=False))
 
     rng = np.random.default_rng(0)
     lens = list(request_lengths(24, max_len=64, dist="bert"))
@@ -67,9 +69,8 @@ def main():
     print(f"decode: {ds['decoded_tokens']} tokens in {ds['steps']} steps, "
           f"per-step slot utilization {ds['slot_utilization']:.2f} "
           f"(the serving-side PE-utilization analogue)")
-    pool = eng.slots.pool
-    print(f"paged lane pool: {pool.total_pages} pages x "
-          f"{eng.page_size} tokens, mean occupancy "
+    print(f"paged lane pool: {ds['kv_pages_total']} pages x "
+          f"{eng.config.page_size} tokens, mean occupancy "
           f"{ds['kv_memory_ratio']:.2f} of capacity "
           f"(contiguous lanes would pin 1.00), "
           f"{ds['preemptions']} preemptions "
@@ -97,7 +98,8 @@ def main():
     rcfg = get_config("recurrentgemma-2b", "smoke")
     rmodel = Model(rcfg)
     rparams = rmodel.init(jax.random.key(1))
-    reng = Engine(rmodel, rparams, max_len=16, max_new_tokens=6, num_slots=4)
+    reng = Engine(rmodel, rparams, config=EngineConfig(
+        max_len=16, max_new_tokens=6, num_slots=4))
     for rid, n in enumerate(rng.integers(3, 14, size=12)):
         reng.submit(Request(rid=rid, prompt=rng.integers(
             0, rcfg.vocab_size, size=int(n)).astype(np.int32),
@@ -117,9 +119,10 @@ def main():
     # injects a NaN mid-decode — quarantined to its slot while every
     # other request keeps its exact tokens. Audits re-check the pool
     # invariants every iteration.
-    deng = Engine(model, params, max_len=64, max_new_tokens=8, num_slots=2,
-                  page_size=16, max_pending=8, audit=True,
-                  faults=FaultPlan(seed=3, nan_at=((2, 0),)))
+    deng = Engine(model, params, config=EngineConfig(
+        max_len=64, max_new_tokens=8, num_slots=2, page_size=16,
+        max_pending=8, audit=True),
+        faults=FaultPlan(seed=3, nan_at=((2, 0),)))
     for rid, n in enumerate(request_lengths(16, max_len=64, dist="bert")):
         deng.submit(Request(rid=200 + rid, prompt=rng.integers(
             0, cfg.vocab_size, size=int(n)).astype(np.int32),
@@ -164,9 +167,9 @@ def main():
 
     print("\nbursty mid-decode arrivals (16 long prompts in 3 waves):")
     for mixed in (True, False):
-        beng = Engine(model, params, max_len=64, max_new_tokens=8,
-                      num_slots=8, page_size=8, max_prompt_len=512,
-                      prefix_share=False, mixed=mixed)
+        beng = Engine(model, params, config=EngineConfig(
+            max_len=64, max_new_tokens=8, num_slots=8, page_size=8,
+            max_prompt_len=512, prefix_share=False, mixed=mixed))
         bdone = beng.run(arrivals=burst_arrivals())
         bds = beng.decode_stats
         dev = sorted(v["device_tokens"] for v in bds["ttft"].values())

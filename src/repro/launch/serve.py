@@ -14,7 +14,7 @@ from repro.checkpoint import latest_step, restore_checkpoint
 from repro.configs import get_config
 from repro.data import request_lengths
 from repro.models.transformer import Model
-from repro.serve import Engine, Request
+from repro.serve import Engine, EngineConfig, Request
 
 
 def main():
@@ -31,20 +31,19 @@ def main():
     model = Model(cfg)
     params = model.init(jax.random.key(0))
     if args.ckpt and latest_step(args.ckpt) is not None:
-        state_like = {"params": params}
         try:
-            restored, step = restore_checkpoint(args.ckpt, state_like)
+            restored, step = restore_checkpoint(args.ckpt,
+                                                {"params": params})
             params = restored["params"]
             print(f"loaded checkpoint step {step}")
         except KeyError:
-            # train-loop checkpoints carry opt state; restore params only
-            import numpy as _np
-            data = _np.load(f"{args.ckpt}/step_{latest_step(args.ckpt):08d}"
-                            "/arrays.npz")
-            print("partial restore: params only")
+            # checkpoints written from a bare params tree have no
+            # "params/" key prefix; retry against the bare structure
+            params, step = restore_checkpoint(args.ckpt, params)
+            print(f"partial restore: params only (step {step})")
 
-    eng = Engine(model, params, max_len=args.max_len,
-                 max_new_tokens=args.max_new)
+    eng = Engine(model, params, config=EngineConfig(
+        max_len=args.max_len, max_new_tokens=args.max_new))
     rng = np.random.default_rng(0)
     for rid, n in enumerate(request_lengths(args.requests, args.max_len,
                                             "bert")):

@@ -1,5 +1,20 @@
 """Serving layer: T-REX dynamic batching extended to continuous batching.
 
+Public surface (``__all__``) — everything a serving caller needs:
+
+* ``Engine`` + ``EngineConfig`` — the slot engine and its validated,
+  frozen construction config (``Engine(model, params, config=...)``;
+  loose legacy kwargs still work behind a deprecation shim).
+* ``Request`` + ``SamplingParams`` — one generation request, optionally
+  carrying per-request sampling overrides (mixed greedy + sampled
+  batches share one jitted step).
+* ``Frontend`` — asyncio submit/stream/cancel tier over any steppable
+  engine; ``Dispatcher`` — N replicas behind the same steppable
+  protocol, joined by a fleet-shared prefix index.
+* ``FaultPlan`` — the seeded chaos harness; ``TERMINAL_STATUSES`` — the
+  closed set of per-request terminal statuses
+  (``ok | rejected | shed | timed_out | failed | cancelled``).
+
 Architecture:
 
 * :mod:`repro.serve.scheduler` — iteration-level admission queue.
@@ -19,33 +34,45 @@ Architecture:
   so cache *memory* scales with occupancy (the paper's reduced external
   memory access) the way the TDA kernel makes compute scale. The pool's
   ``memory_ratio`` is the footprint counterpart of the blocks-visited
-  ratio.
+  ratio. ``FleetPrefixIndex`` adds a cross-replica host-memory page tier.
 * :mod:`repro.serve.sampling` — in-graph temperature/top-k sampling with
   per-(request, position) PRNG keys; greedy (``temperature=0``) stays the
-  bit-identical default.
+  bit-identical default. ``SamplingParams`` carries per-request overrides.
+* :mod:`repro.serve.config` — ``EngineConfig``: every construction-time
+  engine knob in one frozen dataclass, with all model/mesh compatibility
+  checks (``UnsupportedConfigError``) in one ``validate``.
 * :mod:`repro.serve.engine` — ``Engine``: prefill → lane assign → one
   jitted decode step over all slots per token, with mid-decode admissions,
   per-request stop conditions, page-budget admission and
   preempt-and-requeue when the pool exhausts, for every ``configs/``
-  architecture (the lock-step fallback is gone).
-
+  architecture. ``Engine.step()`` exposes the loop one iteration at a
+  time (admit → one jitted dispatch → retire) for external drivers.
+* :mod:`repro.serve.frontend` — ``Frontend``: asyncio submit / per-token
+  ``async for`` streaming / mid-decode cancellation over a steppable
+  engine, token-identical to ``Engine.run`` on the same trace.
+* :mod:`repro.serve.dispatch` — ``Dispatcher``: deterministic
+  least-loaded routing over engine replicas, fleet prefix sharing, and
+  merged fleet ``decode_stats``.
 * :mod:`repro.serve.faults` — ``FaultPlan`` / ``FaultInjector``: the
   seeded, deterministic chaos harness behind the engine's failure
   hardening (page-allocation failures, forced preemptions, NaN logits,
   artificial stalls). Every request the engine returns carries a terminal
-  ``status`` (``ok | rejected | shed | timed_out | failed``); the opt-in
-  ``Engine(audit=True)`` mode re-checks the pool/CoW invariants each step
-  with a structured ``AuditError``.
+  ``status``; the opt-in ``audit=True`` mode re-checks the pool/CoW
+  invariants each step with a structured ``AuditError``.
 
 See ``docs/serving.md`` for the slot-engine lifecycle, the page-table
-contract, the serving failure model, and the benchmark sidecar contract.
+contract, the serving failure model, the async front-end / replica tier,
+and the benchmark sidecar contract.
 """
 from repro.core.errors import AuditError, UnsupportedConfigError  # noqa: F401
-from repro.serve.engine import Engine  # noqa: F401
+from repro.serve.config import EngineConfig  # noqa: F401
+from repro.serve.dispatch import Dispatcher  # noqa: F401
+from repro.serve.engine import Engine, StepResult  # noqa: F401
 from repro.serve.faults import FaultInjector, FaultPlan  # noqa: F401
+from repro.serve.frontend import Frontend, StreamHandle  # noqa: F401
 from repro.serve.kv_slots import SlotKVCache, SlotStateTable  # noqa: F401
-from repro.serve.pages import PagePool  # noqa: F401
-from repro.serve.sampling import sample_tokens  # noqa: F401
+from repro.serve.pages import FleetPrefixIndex, PagePool  # noqa: F401
+from repro.serve.sampling import SamplingParams, sample_tokens  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
     TERMINAL_STATUSES,
     Admission,
@@ -54,7 +81,16 @@ from repro.serve.scheduler import (  # noqa: F401
     Scheduler,
 )
 
-__all__ = ["Engine", "SlotKVCache", "SlotStateTable", "PagePool",
-           "sample_tokens", "Scheduler", "DynamicBatcher", "Request",
-           "Admission", "FaultPlan", "FaultInjector", "AuditError",
-           "UnsupportedConfigError", "TERMINAL_STATUSES"]
+# The supported serving API. Internals (Scheduler, SlotKVCache, PagePool,
+# sample_tokens, ...) stay importable for tests/benchmarks but are not
+# part of the stable surface.
+__all__ = [
+    "Engine",
+    "EngineConfig",
+    "Request",
+    "SamplingParams",
+    "Frontend",
+    "Dispatcher",
+    "FaultPlan",
+    "TERMINAL_STATUSES",
+]

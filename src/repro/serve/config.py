@@ -1,0 +1,135 @@
+"""Engine construction surface: one validated, frozen config object.
+
+``Engine.__init__`` accumulated ~20 serving knobs over the PR stack —
+paging, prefix sharing, the mixed step, failure hardening, sampling
+defaults. :class:`EngineConfig` consolidates them into a single frozen
+dataclass whose :meth:`~EngineConfig.validate` holds **every**
+construction-time :class:`~repro.core.errors.UnsupportedConfigError`
+check in one place, so an unservable deployment (compressed MoE experts
+on a mesh, a GQA head count the mesh can't split, ``mixed=True`` on a
+recurrent stack) is refused before any compile with the same actionable
+messages the engine used to raise inline.
+
+``Engine(model, params, config=EngineConfig(...))`` is the new surface;
+the legacy per-knob kwargs keep working through a shim in ``engine.py``
+that builds an :class:`EngineConfig` and warns once per process.
+
+Runtime collaborators stay out of the config on purpose: ``mesh``
+(device placement), ``faults`` (a seeded injector), and ``fleet`` (the
+cross-replica prefix index) are live objects, not serializable knobs —
+they remain keyword arguments of ``Engine`` itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.errors import UnsupportedConfigError
+from repro.launch.mesh import tensor_parallel_size
+
+RECURRENT_KINDS = frozenset({"ssd", "rglru"})
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Every serving knob of :class:`~repro.serve.engine.Engine`, with the
+    same defaults the legacy kwargs carried. See ``docs/serving.md``
+    ("Async front-end & replicas") for the migration table."""
+
+    # capacity / shapes
+    max_len: int = 128
+    max_new_tokens: int = 16
+    num_slots: int = 8
+    max_prompt_len: Optional[int] = None
+    eos_id: Optional[int] = None
+    max_rows: int = 8
+    # decode attention kernel selection
+    decode_attn: str = "auto"
+    decode_block_k: Optional[int] = None
+    # paged KV lanes + prefix sharing
+    paged: bool = True
+    page_size: Optional[int] = None
+    pool_frac: float = 1.0
+    page_cap: Optional[int] = None
+    prefix_share: bool = True
+    # engine-wide sampling defaults (per-request SamplingParams override)
+    temperature: float = 0.0
+    top_k: Optional[int] = None
+    seed: int = 0
+    # traffic accounting
+    weight_stream_bits: Optional[float] = None
+    # failure hardening
+    audit: Optional[bool] = None
+    max_pending: Optional[int] = None
+    default_ttl_steps: Optional[int] = None
+    max_preemptions_per_request: Optional[int] = None
+    watchdog_patience: int = 64
+    # interleaved chunked prefill
+    mixed: Optional[bool] = None
+    prefill_budget: Optional[int] = None
+
+    # ------------------------------------------------------------------
+
+    def _model_traits(self, model_cfg) -> dict:
+        """Derived servability traits of a model config — the facts every
+        construction-time check (and the engine itself) branches on."""
+        kinds = {model_cfg.block_kind(i) for i in range(model_cfg.n_layers)}
+        has_attn = bool(kinds & {"attn", "local"})
+        recurrent = bool(kinds & RECURRENT_KINDS)
+        paged = bool(self.paged) and has_attn
+        return {
+            "kinds": kinds,
+            "has_attn": has_attn,
+            "recurrent": recurrent,
+            "paged": paged,
+            # Mixed step needs paged attention lanes (chunk K/V scatters
+            # through block tables), no recurrent layers (no multi-token
+            # decode form), and unquantized KV (a later chunk would attend
+            # quantized K/V of earlier chunks — not token-identical).
+            "mixed_ok": (has_attn and not recurrent and paged
+                         and not model_cfg.kv_quant),
+        }
+
+    def validate(self, model_cfg, mesh=None) -> dict:
+        """Refuse unservable deployments at construction, not mid-decode.
+
+        All construction-time ``UnsupportedConfigError`` / ``ValueError``
+        checks live here — ``Engine.__init__`` delegates — and the derived
+        traits are returned so the engine resolves ``paged`` / ``mixed``
+        from the same facts that were validated."""
+        traits = self._model_traits(model_cfg)
+        # Compressed MoE expert streams (wd_vq) cannot ride moe_ffn's
+        # sharded EP/TP path, whose in_specs shard the dense 'wd' leaf.
+        if (mesh is not None and model_cfg.moe is not None
+                and model_cfg.weight_format == "compressed"
+                and getattr(getattr(mesh, "devices", None), "size", 1) > 1):
+            raise UnsupportedConfigError(
+                "cannot serve compressed MoE expert weights (wd_vq "
+                f"streams) on a {mesh.devices.size}-device mesh: moe_ffn's "
+                "EP/TP in_specs shard the dense 'wd' leaf, not the "
+                "streaming format. Either serve without a mesh (mesh=None "
+                "or a 1-device mesh), or serve dense-factorized params "
+                "(skip Model.compress_params) on the mesh.")
+        # Tensor-parallel decode shards the KV-head axis, so the head
+        # counts must split evenly across the mesh's 'model' axis.
+        tp = tensor_parallel_size(mesh)
+        if tp > 1 and (model_cfg.kv_heads % tp or model_cfg.n_heads % tp):
+            raise UnsupportedConfigError(
+                f"cannot shard decode over a {tp}-way 'model' mesh "
+                f"axis: kv_heads={model_cfg.kv_heads} / "
+                f"n_heads={model_cfg.n_heads} must both be divisible by "
+                "the tensor-parallel size (KV-head sharding gives each "
+                "rank a whole number of heads). Use a mesh whose 'model' "
+                "axis divides the head counts, or serve unsharded.")
+        if self.mixed and not traits["mixed_ok"]:
+            raise UnsupportedConfigError(
+                "mixed-step serving needs a paged, attention-only, "
+                f"unquantized-KV stack: got paged={traits['paged']}, "
+                f"recurrent={traits['recurrent']}, "
+                f"kv_quant={model_cfg.kv_quant}. Drop mixed=True to use "
+                "the phase-serialized engine.")
+        if self.prefill_budget is not None and self.prefill_budget < 1:
+            raise ValueError(
+                f"prefill_budget must be >= 1 token/step, got "
+                f"{self.prefill_budget}")
+        return traits

@@ -133,8 +133,10 @@ strictly below the dense-factorized run of the same workload
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -149,10 +151,11 @@ from repro.kernels.tda.ref import block_stats
 from repro.launch import sharding as shd
 from repro.launch.mesh import tensor_parallel_size
 from repro.models.transformer import Model
+from repro.serve.config import RECURRENT_KINDS, EngineConfig
 from repro.serve.faults import FaultInjector, FaultPlan
 from repro.serve.kv_slots import SlotKVCache
-from repro.serve.pages import PrefixHit
-from repro.serve.sampling import sample_tokens
+from repro.serve.pages import PrefixHit, prefix_digests
+from repro.serve.sampling import sample_tokens_batch
 from repro.serve.scheduler import (
     TERMINAL_STATUSES,
     Admission,
@@ -160,60 +163,104 @@ from repro.serve.scheduler import (
     Scheduler,
 )
 
-__all__ = ["Engine"]
+__all__ = ["Engine", "EngineConfig", "StepResult"]
 
-RECURRENT_KINDS = frozenset({"ssd", "rglru"})
+# The legacy per-kwarg construction surface warns once per process (the
+# shim keeps every old call site working while steering new code to
+# Engine(model, params, config=EngineConfig(...))).
+_LEGACY_KWARGS_WARNED = False
+
+
+def _resolve_engine_config(config: Optional[EngineConfig],
+                           legacy: Dict) -> EngineConfig:
+    """Merge the two construction surfaces: an explicit ``EngineConfig``
+    or the legacy per-knob kwargs (never both)."""
+    global _LEGACY_KWARGS_WARNED
+    if not legacy:
+        return config if config is not None else EngineConfig()
+    if config is not None:
+        raise TypeError(
+            "pass either config=EngineConfig(...) or the legacy per-knob "
+            f"kwargs, not both (got config plus {sorted(legacy)})")
+    names = {f.name for f in dataclasses.fields(EngineConfig)}
+    unknown = sorted(set(legacy) - names)
+    if unknown:
+        raise TypeError(f"Engine() got unexpected keyword arguments "
+                        f"{unknown}; see EngineConfig for the serving "
+                        "knobs (mesh/faults/fleet stay Engine kwargs)")
+    if not _LEGACY_KWARGS_WARNED:
+        warnings.warn(
+            "Engine's per-knob kwargs are deprecated; pass "
+            "config=EngineConfig(...) instead (docs/serving.md has the "
+            "migration table)", DeprecationWarning, stacklevel=3)
+        _LEGACY_KWARGS_WARNED = True
+    return EngineConfig(**legacy)
+
+
+@dataclasses.dataclass
+class StepResult:
+    """What one :meth:`Engine.step` iteration did, for external drivers
+    (``serve/frontend.py``): the tokens streamed this step as
+    ``(request, token)`` events in emission order (continuations resolved
+    to their origin request), the requests that reached a terminal status
+    this step, and the modeled device time after the step's dispatch —
+    the emission timestamp behind the inter-token-latency metrics."""
+
+    emitted: List[Tuple[Request, int]] = dataclasses.field(
+        default_factory=list)
+    finished: List[Request] = dataclasses.field(default_factory=list)
+    device_time: int = 0
+
+
+@dataclasses.dataclass
+class _RunState:
+    """Per-session loop state, lifted out of the old ``run`` loop so
+    :meth:`Engine.step` can be driven externally one iteration at a time.
+    ``done`` accumulates every terminal request of the session (what
+    ``run`` returns; ``StepResult.finished`` is the per-step tail)."""
+
+    cur: np.ndarray       # next input token per slot
+    emitted: np.ndarray   # tokens emitted so far per slot
+    budget: np.ndarray    # per-slot output budget
+    # Mixed-step chunk state: pending[s] is the un-prefilled prompt suffix
+    # still to stream through slot s's chunk rows (None once prefill
+    # completes / for decode rows); pending_full[s] keeps the admitted
+    # prompt for the completion-time prefix publish.
+    pending: List[Optional[np.ndarray]]
+    pending_full: List[Optional[np.ndarray]]
+    done: List[Request] = dataclasses.field(default_factory=list)
+    iters: int = 0
+    steps: int = 0
+    active_slot_steps: int = 0
+    decoded_tokens: int = 0
+    blocks_visited: int = 0
+    blocks_dense: int = 0
+    kv_bytes: float = 0.0
+    preemptions: int = 0
+    preempt_recovered: int = 0
+    pages_used_steps: int = 0
+    mixed_steps: int = 0
+    chunk_tokens: int = 0  # fresh prompt tokens streamed via mixed steps
+    idle: int = 0  # consecutive iterations with nothing decoded/admitted
 
 
 class Engine:
-    def __init__(self, model: Model, params, max_len: int = 128,
-                 max_new_tokens: int = 16, mesh=None, num_slots: int = 8,
-                 max_prompt_len: Optional[int] = None,
-                 eos_id: Optional[int] = None, max_rows: int = 8,
-                 decode_attn: str = "auto",
-                 decode_block_k: Optional[int] = None,
-                 paged: bool = True, page_size: Optional[int] = None,
-                 pool_frac: float = 1.0, prefix_share: bool = True,
-                 temperature: float = 0.0, top_k: Optional[int] = None,
-                 seed: int = 0,
-                 weight_stream_bits: Optional[float] = None,
-                 audit: Optional[bool] = None,
-                 faults=None,
-                 max_pending: Optional[int] = None,
-                 default_ttl_steps: Optional[int] = None,
-                 max_preemptions_per_request: Optional[int] = None,
-                 watchdog_patience: int = 64,
-                 page_cap: Optional[int] = None,
-                 mixed: Optional[bool] = None,
-                 prefill_budget: Optional[int] = None):
-        # Fail unsupported deployments at construction, not mid-decode:
-        # compressed MoE expert streams (wd_vq) cannot ride moe_ffn's
-        # sharded EP/TP path, whose in_specs shard the dense 'wd' leaf.
-        if (mesh is not None and model.cfg.moe is not None
-                and model.cfg.weight_format == "compressed"
-                and getattr(getattr(mesh, "devices", None), "size", 1) > 1):
-            raise UnsupportedConfigError(
-                "cannot serve compressed MoE expert weights (wd_vq "
-                f"streams) on a {mesh.devices.size}-device mesh: moe_ffn's "
-                "EP/TP in_specs shard the dense 'wd' leaf, not the "
-                "streaming format. Either serve without a mesh (mesh=None "
-                "or a 1-device mesh), or serve dense-factorized params "
-                "(skip Model.compress_params) on the mesh.")
-        # Tensor-parallel decode shards the KV-head axis (each rank owns
-        # its heads' pages; kernels/tda/sharded.py merges the per-rank
-        # softmax partials), so the head counts must split evenly — a GQA
-        # config whose kv_heads don't divide the mesh is refused at
-        # construction with the actionable numbers, not at trace time.
+    def __init__(self, model: Model, params,
+                 config: Optional[EngineConfig] = None, *,
+                 mesh=None, faults=None, fleet=None, **legacy):
+        # One construction surface: every serving knob lives in the frozen
+        # EngineConfig (serve/config.py), whose validate() holds ALL the
+        # construction-time UnsupportedConfigError checks — unsupported
+        # deployments fail here, not mid-decode. Legacy per-knob kwargs
+        # keep working via a warn-once shim. Runtime collaborators (mesh,
+        # faults, fleet) stay keyword arguments: they are live objects,
+        # not serializable knobs.
+        cfg_e = _resolve_engine_config(config, legacy)
+        self.config = cfg_e
+        traits = cfg_e.validate(model.cfg, mesh)
         self._tp = tensor_parallel_size(mesh)
-        if self._tp > 1 and (model.cfg.kv_heads % self._tp
-                             or model.cfg.n_heads % self._tp):
-            raise UnsupportedConfigError(
-                f"cannot shard decode over a {self._tp}-way 'model' mesh "
-                f"axis: kv_heads={model.cfg.kv_heads} / "
-                f"n_heads={model.cfg.n_heads} must both be divisible by "
-                "the tensor-parallel size (KV-head sharding gives each "
-                "rank a whole number of heads). Use a mesh whose 'model' "
-                "axis divides the head counts, or serve unsharded.")
+        max_len = cfg_e.max_len
+        num_slots = cfg_e.num_slots
         self.model = model
         self.params = params
         # Column/row-parallel weight placement (launch/sharding.py): dense
@@ -227,25 +274,25 @@ class Engine:
             pspecs = shd.param_specs(jax.eval_shape(lambda: params), mesh)
             self.params = jax.device_put(params, shd.named(pspecs, mesh))
         self.max_len = max_len
-        self.max_new = max_new_tokens
+        self.max_new = cfg_e.max_new_tokens
         self.mesh = mesh
-        self.eos_id = eos_id
+        self.eos_id = cfg_e.eos_id
         self.num_slots = num_slots
-        self.temperature = float(temperature)
-        self.top_k = top_k
-        self._base_seed = int(seed)
+        self.temperature = float(cfg_e.temperature)
+        self.top_k = cfg_e.top_k
+        self._base_seed = int(cfg_e.seed)
         # Cache lanes must hold the longest admissible prompt plus the
         # decode budget; prompts up to 2*max_len are admitted by default via
         # the chunking path (raise max_prompt_len for longer traffic).
-        self.max_prompt_len = max_prompt_len or 2 * max_len
+        self.max_prompt_len = cfg_e.max_prompt_len or 2 * max_len
         self.cache_len = self.max_prompt_len + self.max_new
-        kinds = {model.cfg.block_kind(i) for i in range(model.cfg.n_layers)}
-        has_attn = bool(kinds & {"attn", "local"})
+        kinds = traits["kinds"]
+        has_attn = traits["has_attn"]
         # Recurrent prefill caches hold one end-of-sequence state per row,
         # so those stacks admit one request per row (no intra-row packing);
         # the weight sweep is still shared across the admitted rows.
-        self._recurrent = bool(kinds & RECURRENT_KINDS)
-        self.scheduler = Scheduler(max_len=max_len, max_rows=max_rows,
+        self._recurrent = traits["recurrent"]
+        self.scheduler = Scheduler(max_len=max_len, max_rows=cfg_e.max_rows,
                                    max_prompt_len=self.max_prompt_len,
                                    pack=not self._recurrent)
         # SSD's chunked scan needs prefill widths that are chunk multiples.
@@ -255,32 +302,43 @@ class Engine:
         # fused TDA kernel on TPU and keeps the dense jnp path elsewhere
         # (interpret-mode Pallas on CPU would lose to one einsum). Prefill
         # always runs on the original model — flash attention is unaffected.
-        self.decode_attn = resolve_decode_attn(decode_attn) \
+        self.decode_attn = resolve_decode_attn(cfg_e.decode_attn) \
             if has_attn else "dense"
-        dmodel = model.with_decode_attn(self.decode_attn, decode_block_k)
+        dmodel = model.with_decode_attn(self.decode_attn,
+                                        cfg_e.decode_block_k)
         self._block_k = dmodel.cfg.decode_block_k
         # Paged lane pool: only attention lanes page (recurrent state lanes
         # are fixed-shape); one page is one TDA kv block, so the default
         # page size is the predication block size.
-        self.paged = bool(paged) and has_attn
-        self.page_size = (page_size or self._block_k) if self.paged else None
+        self.paged = traits["paged"]
+        self.page_size = (cfg_e.page_size or self._block_k) \
+            if self.paged else None
         if self.paged:
             self._block_k = self.page_size  # grid == pages: keep stats honest
         self.slots = SlotKVCache(model, num_slots, self.cache_len,
                                  page_size=self.page_size,
-                                 pool_frac=pool_frac,
-                                 page_cap=page_cap if self.paged else None,
+                                 pool_frac=cfg_e.pool_frac,
+                                 page_cap=cfg_e.page_cap
+                                 if self.paged else None,
                                  mesh=mesh)
         # Page-level prefix sharing: only meaningful for paged stacks whose
         # cache is *entirely* per-token kv lanes — a recurrent layer would
         # need its end-of-prefix state, which is neither paged nor
         # content-addressable, so hybrids and SSM stacks degrade to cold
         # prefills (probe never fires).
-        self.prefix_share = bool(prefix_share) and self.paged and all(
+        self.prefix_share = bool(cfg_e.prefix_share) and self.paged and all(
             s == "kv" for s in jax.tree.leaves(self.slots.specs))
         self._shared_tokens = 0
         self._prompt_tokens = 0
         self._pages_shared = 0
+        # Cross-replica prefix sharing: a FleetPrefixIndex (serve/pages.py)
+        # shared by N replicas — publishes mirror host copies of full
+        # prefix pages, probes restore fleet-only pages into the local
+        # pool. Attached at construction or later (Dispatcher wires it).
+        self._fleet = None
+        self._fleet_restored_pages = 0
+        if fleet is not None:
+            self.attach_fleet(fleet)
         # ---- mixed step (chunked prefill interleaved with decode): fold
         # up to ``prefill_budget`` fresh prompt tokens per step into the
         # same fixed-shape jitted call that advances every decode slot.
@@ -290,28 +348,16 @@ class Engine:
         # multi-token decode form here). kv_quant is gated off: a later
         # chunk would attend the *quantized* K/V of earlier chunks while
         # the serialized prefill attends unquantized — not token-identical.
-        mixed_ok = (has_attn and not self._recurrent and self.paged
-                    and not model.cfg.kv_quant)
-        if mixed is None:
-            self.mixed = mixed_ok
-        elif mixed and not mixed_ok:
-            raise UnsupportedConfigError(
-                "mixed-step serving needs a paged, attention-only, "
-                f"unquantized-KV stack: got paged={self.paged}, "
-                f"recurrent={self._recurrent}, "
-                f"kv_quant={model.cfg.kv_quant}. Drop mixed=True to use "
-                "the phase-serialized engine.")
-        else:
-            self.mixed = bool(mixed)
-        if prefill_budget is not None and prefill_budget < 1:
-            raise ValueError(
-                f"prefill_budget must be >= 1 token/step, got "
-                f"{prefill_budget}")
-        self.prefill_budget = prefill_budget
+        # (validate() already refused an explicit mixed=True on an
+        # unsupported stack, with the actionable message.)
+        self.mixed = traits["mixed_ok"] if cfg_e.mixed is None \
+            else bool(cfg_e.mixed)
+        self.prefill_budget = cfg_e.prefill_budget
         # Static chunk-row width of the mixed step (one compiled shape):
         # no row ever carries more fresh tokens than the whole-step budget
         # or a serialized prefill row would.
-        self._chunk_width = max(1, min(max_len, prefill_budget or max_len))
+        self._chunk_width = max(1, min(max_len,
+                                       cfg_e.prefill_budget or max_len))
         # Static layer -> lane-width map for the paged decode step: one
         # width for uniform stacks, per-layer (None on recurrent layers)
         # otherwise. Derived from the slot table's per-leaf widths — the
@@ -348,7 +394,8 @@ class Engine:
         # Model.compress_params (sub-byte streams); the fallback prices
         # every param leaf at its in-memory width.
         self._weight_stream_bits = (
-            float(weight_stream_bits) if weight_stream_bits is not None
+            float(cfg_e.weight_stream_bits)
+            if cfg_e.weight_stream_bits is not None
             else float(params_stream_bits(params)) if params is not None
             else 0.0)
         # KV: bytes per cached token actually visited by the predicated
@@ -360,9 +407,13 @@ class Engine:
         else:
             self._kv_token_bytes = (2 * c.kv_heads * c.head_dim
                                     * c.compute_dtype.itemsize)
-        # Per-slot sampling seeds + admission order (preemption victims are
+        # Per-slot sampling state (seed / temperature / top-k resolved at
+        # admission from the request's SamplingParams, engine defaults
+        # otherwise) + admission order (preemption victims are
         # youngest-first, vLLM-style, so older requests always progress).
         self._seeds = np.zeros(num_slots, np.uint32)
+        self._temps = np.zeros(num_slots, np.float32)
+        self._topks = np.zeros(num_slots, np.int32)  # 0 = no truncation
         self._admit_seq = np.zeros(num_slots, np.int64)
         self._seq = 0
         self.stats: List[Dict] = []  # one entry per prefill sweep
@@ -371,13 +422,14 @@ class Engine:
         # Audit mode: env-defaulted so CI can run the whole equivalence
         # suite with production invariant audits on (REPRO_SERVE_AUDIT=1)
         # without duplicating any test.
+        audit = cfg_e.audit
         if audit is None:
             audit = bool(int(os.environ.get("REPRO_SERVE_AUDIT", "0") or 0))
         self.audit = bool(audit)
-        self.max_pending = max_pending
-        self.default_ttl = default_ttl_steps
-        self.max_preempt = max_preemptions_per_request
-        self.watchdog_patience = int(watchdog_patience)
+        self.max_pending = cfg_e.max_pending
+        self.default_ttl = cfg_e.default_ttl_steps
+        self.max_preempt = cfg_e.max_preemptions_per_request
+        self.watchdog_patience = int(cfg_e.watchdog_patience)
         # Fault injection: a FaultPlan builds a FRESH injector per run()
         # (every run replays the same seeded schedule); an injector
         # instance is used as-is (schedule continues across runs).
@@ -412,6 +464,10 @@ class Engine:
         # All-false nan-injection mask: committed once so the no-fault hot
         # path re-passes the same device array every step.
         self._no_nan = jnp.zeros(num_slots, bool)
+        # Stepping session (serve/frontend.py drives step() directly;
+        # run() is a thin loop over it). None = no session in flight.
+        self._st: Optional[_RunState] = None
+        self._events: Optional[List[Tuple[Request, int]]] = None
 
         def prefill_fn(params, batch):
             rows, width = batch["inputs"].shape
@@ -437,7 +493,7 @@ class Engine:
             return logits, new_caches
 
         def decode_fn(params, tokens, caches, lengths, active, seeds,
-                      tables, nan_mask):
+                      temps, topks, tables, nan_mask, sampled):
             pages = None
             if self.paged:
                 def entry(w):
@@ -455,13 +511,19 @@ class Engine:
             # Fault injection lands *after* the model: caches never see
             # the poison and other slots are untouched by construction.
             row = jnp.where(nan_mask[:, None], jnp.nan, row)
-            if self.temperature > 0:
+            if sampled:
                 # The drawn token's absolute position is lengths + 1: the
                 # same (request, position) key a preempted-then-resumed
                 # request re-derives at its prefill (serve/sampling.py).
-                nxt = sample_tokens(row, seeds, lengths + 1,
-                                    self.temperature, self.top_k)
+                # Per-slot temperature/top-k (resolved from each request's
+                # SamplingParams at admission) ride in-graph; greedy rows
+                # (temps == 0) take the batch sampler's argmax lane.
+                nxt = sample_tokens_batch(row, seeds, lengths + 1,
+                                          temps, topks)
             else:
+                # ``sampled`` is a trace-time flag: an all-greedy batch
+                # compiles (and stays bit-identical to) the plain argmax
+                # graph — no sort/categorical ops to build or pay for.
                 nxt = jnp.argmax(row, axis=-1).astype(jnp.int32)
             # In-graph finiteness guard: a slot whose logits went NaN/Inf
             # (flaky kernel, injected fault) reports the -1 sentinel —
@@ -472,7 +534,7 @@ class Engine:
             return nxt, new_caches
 
         def mixed_fn(params, tokens, caches, lengths, n_new, active, seeds,
-                     tables, nan_mask):
+                     temps, topks, tables, nan_mask, sampled):
             # One fixed-shape step over chunk rows AND decode rows:
             # row b's columns [0, n_new[b]) are fresh tokens at absolute
             # positions [lengths[b], lengths[b] + n_new[b]) — decode rows
@@ -495,13 +557,13 @@ class Engine:
             row = jnp.take_along_axis(logits, last[:, None, None],
                                       axis=1)[:, 0]
             row = jnp.where(nan_mask[:, None], jnp.nan, row)
-            if self.temperature > 0:
+            if sampled:
                 # Absolute position of the sampled token: lengths + n_new
                 # tokens precede it — the same (request, position) key the
                 # serialized engine derives (prefill first token: L;
                 # decode: lengths + 1), so sampling is bit-identical.
-                nxt = sample_tokens(row, seeds, lengths + n_new,
-                                    self.temperature, self.top_k)
+                nxt = sample_tokens_batch(row, seeds, lengths + n_new,
+                                          temps, topks)
             else:
                 nxt = jnp.argmax(row, axis=-1).astype(jnp.int32)
             bad = ~jnp.all(jnp.isfinite(row), axis=-1)
@@ -517,19 +579,21 @@ class Engine:
         self._prefill = jax.jit(prefill_fn)
         self._prefill_shared = jax.jit(prefill_shared_fn) \
             if self.prefix_share else None
-        self._decode = jax.jit(decode_fn, donate_argnums=donate)
-        self._mixed = jax.jit(mixed_fn, donate_argnums=donate) \
+        # ``sampled`` is static: an all-greedy step compiles (and caches)
+        # exactly the argmax-only graph — at most two compiled variants.
+        self._decode = jax.jit(decode_fn, donate_argnums=donate,
+                               static_argnums=(10,))
+        self._mixed = jax.jit(mixed_fn, donate_argnums=donate,
+                              static_argnums=(11,)) \
             if self.mixed else None
-        if self.temperature > 0:
-            t, tk = self.temperature, self.top_k
+        def sample1(row, seed, pos, temp, topk):
+            return sample_tokens_batch(row[None], seed[None], pos[None],
+                                       temp[None], topk[None])[0]
 
-            def sample1(row, seed, pos):
-                return sample_tokens(row[None], seed[None], pos[None],
-                                     t, tk)[0]
-
-            # First tokens come from prefill logits on the host; one jit of
-            # the very same sampling fn keeps them bit-identical to decode.
-            self._sample1 = jax.jit(sample1)
+        # First tokens come from prefill logits on the host; one jit of
+        # the very same batch sampler (as a 1-row batch) keeps them
+        # bit-identical to decode, per-request parameters included.
+        self._sample1 = jax.jit(sample1)
 
     # ------------------------------------------------------------------
 
@@ -589,58 +653,156 @@ class Engine:
         ``arrivals``: optional ``(tick, Request)`` pairs submitted when the
         run-loop iteration count reaches ``tick`` — a deterministic,
         replayable way to drive bursty mid-decode traffic into either
-        engine mode (the TTFT benchmark's workload contract)."""
-        sl = self.slots
-        # A FaultPlan replays from scratch every run (deterministic chaos);
-        # an explicit FaultInjector instance persists across runs.
-        inj = FaultInjector(self._fault_plan) \
-            if self._fault_plan is not None else self.fault_injector
-        self._inj = inj
-        self.fault_injector = inj
-        done: List[Request] = list(self._terminal)  # shed/rejected at submit
-        self._terminal.clear()
-        cur = np.zeros(self.num_slots, np.int32)      # next input token
-        emitted = np.zeros(self.num_slots, np.int32)  # tokens emitted so far
-        budget = np.zeros(self.num_slots, np.int32)
-        # Mixed-step chunk state: pending[s] is the un-prefilled prompt
-        # suffix still to stream through slot s's chunk rows (None once
-        # prefill completes / for decode rows); pending_full[s] keeps the
-        # admitted prompt for the completion-time prefix publish.
-        pending: List[Optional[np.ndarray]] = [None] * self.num_slots
-        pending_full: List[Optional[np.ndarray]] = [None] * self.num_slots
+        engine mode (the TTFT benchmark's workload contract).
+
+        This is now a thin loop over :meth:`step` — token-identical to the
+        old monolithic loop by construction (same iteration body, same
+        arrival schedule) — so external drivers (``serve/frontend.py``)
+        reuse the exact engine semantics one step at a time."""
+        if self._st is not None:
+            raise RuntimeError(
+                "a stepping session is already in flight; drive it to "
+                "completion via step()/finish_run() before calling run()")
         arr = sorted(arrivals or [], key=lambda a: a[0])
         ai = 0
-        self._shared_tokens = 0   # prompt tokens served from shared pages
-        self._prompt_tokens = 0   # prompt tokens admitted (incl. resumes)
-        self._pages_shared = 0    # page mappings served from the cache
-        steps = 0
-        iters = 0
-        active_slot_steps = 0
-        decoded_tokens = 0
-        blocks_visited = 0
-        blocks_dense = 0
-        kv_bytes = 0.0
-        preemptions = 0
-        preempt_recovered = 0
-        pages_used_steps = 0
-        mixed_steps = 0
-        chunk_tokens = 0  # fresh prompt tokens streamed via mixed steps
-        idle = 0  # consecutive iterations with nothing decoded or admitted
-
-        while (self.scheduler.pending() or sl.active.any()
+        st = self._session()
+        while (self.scheduler.pending() or self.slots.active.any()
                or ai < len(arr)):
+            # The old loop submitted arrivals due at the *incremented*
+            # iteration count; step() bumps st.iters first, so everything
+            # with tick <= st.iters + 1 is due this step.
+            due: List[Request] = []
+            while ai < len(arr) and arr[ai][0] <= st.iters + 1:
+                due.append(arr[ai][1])
+                ai += 1
+            self.step(submits=due)
+        return self.finish_run()
+
+    def has_work(self) -> bool:
+        """True while a step could still make progress: requests queued or
+        decoding. External drivers loop ``while has_work(): step()``."""
+        return bool(self.scheduler.pending() or self.slots.active.any())
+
+    @property
+    def iteration(self) -> int:
+        """The current session's iteration count (0 outside a session) —
+        the tick axis trace arrivals are scheduled on: a request with
+        ``tick <= iteration + 1`` is due for the next :meth:`step`,
+        matching :meth:`run`'s arrival semantics."""
+        return self._st.iters if self._st is not None else 0
+
+    def _session(self) -> _RunState:
+        """The current stepping session, lazily started: fresh per-session
+        loop state, a fresh injector when a :class:`FaultPlan` is attached
+        (every session replays the same seeded schedule), zeroed sharing
+        counters, and any submit-time terminal requests drained into the
+        session's ``done``."""
+        if self._st is None:
+            inj = FaultInjector(self._fault_plan) \
+                if self._fault_plan is not None else self.fault_injector
+            self._inj = inj
+            self.fault_injector = inj
+            self._shared_tokens = 0   # prompt tokens from shared pages
+            self._prompt_tokens = 0   # prompt tokens admitted (+ resumes)
+            self._pages_shared = 0    # page mappings served from the cache
+            self._fleet_restored_pages = 0
+            st = _RunState(
+                cur=np.zeros(self.num_slots, np.int32),
+                emitted=np.zeros(self.num_slots, np.int32),
+                budget=np.zeros(self.num_slots, np.int32),
+                pending=[None] * self.num_slots,
+                pending_full=[None] * self.num_slots)
+            st.done.extend(self._terminal)  # shed/rejected at submit
+            self._terminal.clear()
+            self._st = st
+        return self._st
+
+    def _emit(self, req: Request, tok: int) -> None:
+        """Append one output token (resolving continuations to their
+        origin), stamp its modeled-device-time emission point (the ITL
+        metric's clock), and surface it as a ``StepResult`` event for
+        streaming drivers."""
+        target = getattr(req, "_origin", req)
+        target.output.append(int(tok))
+        devs = getattr(target, "_token_dev", None)
+        if devs is None:
+            devs = []
+            target._token_dev = devs  # type: ignore[attr-defined]
+        devs.append(self._device_time)
+        if self._events is not None:
+            self._events.append((target, int(tok)))
+
+    def _step_result(self, res: StepResult, n_done0: int) -> StepResult:
+        """Seal a step: the requests that reached a terminal status during
+        it (the session ``done`` tail) and the post-dispatch device time."""
+        res.finished = self._st.done[n_done0:]
+        res.device_time = self._device_time
+        return res
+
+    def cancel(self, req: Request) -> bool:
+        """Withdraw a request mid-flight: drop it from the queue and/or
+        release its slot (pages return to the pool immediately), finishing
+        it with ``status="cancelled"``. Safe between steps of a live
+        session (the front-end's cancellation path) and outside one
+        (the request is returned by the next run/session). Returns False
+        when the request already holds a terminal status or is unknown to
+        this engine."""
+        target = getattr(req, "_origin", req)
+        if target.status is not None:
+            return False
+        dropped = self.scheduler.drop_where(
+            lambda r: getattr(r, "_origin", r) is target)
+        hit = bool(dropped)
+        sl = self.slots
+        for s in np.flatnonzero(sl.active):
+            if sl.request[s] is target:
+                sl.release(int(s))
+                if self._st is not None:
+                    self._st.pending[s] = None
+                    self._st.pending_full[s] = None
+                hit = True
+        if not hit:
+            return False
+        if self._st is not None:
+            self._finish(target, "cancelled", "cancelled by caller",
+                         self._st.done)
+        else:
+            self._finish_terminal(target, "cancelled",
+                                  "cancelled by caller")
+        return True
+
+    def step(self, submits: Sequence[Request] = ()) -> StepResult:
+        """ONE engine iteration — admit, one jitted mixed/decode dispatch,
+        retire — exactly the old ``run`` loop body, externally driveable.
+
+        ``submits`` are submitted after this step's clock tick, matching
+        the arrival semantics of :meth:`run`. Returns the step's streamed
+        ``(request, token)`` events and newly terminal requests; call
+        :meth:`finish_run` once :meth:`has_work` goes False to collect the
+        session's ``done`` list and ``decode_stats``."""
+        st = self._session()
+        sl = self.slots
+        inj = self._inj
+        # Slot-indexed session state: arrays/lists are mutated in place,
+        # so the loop body below reads exactly like the old run loop.
+        cur, emitted, budget = st.cur, st.emitted, st.budget
+        pending, pending_full = st.pending, st.pending_full
+        done = st.done
+        res = StepResult()
+        self._events = res.emitted
+        n_done0 = len(done)
+        try:
             # Virtual clock: one tick per iteration, plus injected stall
             # ticks — so deadlines age deterministically even while the
             # queue is head-blocked with nothing decoding.
             self._clock += 1
             if inj is not None:
-                self._clock += inj.begin_step(iters, self.num_slots,
+                self._clock += inj.begin_step(st.iters, self.num_slots,
                                               sl.active)
-            iters += 1
-            while ai < len(arr) and arr[ai][0] <= iters:
-                self.submit(arr[ai][1])
-                ai += 1
-            if self._terminal:  # shed/rejected by a mid-run arrival
+            st.iters += 1
+            for r in submits:
+                self.submit(r)
+            if self._terminal:  # shed/rejected by a submission
                 done.extend(self._terminal)
                 self._terminal.clear()
             progressed = self._expire(done) > 0
@@ -649,8 +811,8 @@ class Engine:
                 victim = int(max(victims,
                                  key=lambda v: self._admit_seq[v]))
                 if self._preempt_or_fail(victim, done):
-                    preempt_recovered += 1
-                preemptions += 1
+                    st.preempt_recovered += 1
+                st.preemptions += 1
             if self.paged:
                 # Lanes grow one page at a time; make every active slot's
                 # next write position resident, preempting the youngest
@@ -660,8 +822,8 @@ class Engine:
                 # assign_many's one-ahead allocation, an admitted request
                 # always survives to its first decode step.
                 rec, esc = self._ensure_pages(done)
-                preemptions += rec + esc
-                preempt_recovered += rec
+                st.preemptions += rec + esc
+                st.preempt_recovered += rec
             if self.mixed:
                 # Expiry / forced preemption / page growth above may have
                 # released mid-prefill slots: drop their chunk state.
@@ -692,14 +854,14 @@ class Engine:
                 # the head is escalated to status="failed", so the loop
                 # can never spin forever.
                 if progressed:
-                    idle = 0
+                    st.idle = 0
                 else:
-                    idle += 1
-                    if idle > self.watchdog_patience:
+                    st.idle += 1
+                    if st.idle > self.watchdog_patience:
                         self._watchdog_escalate(done)
-                        idle = 0
-                continue
-            idle = 0
+                        st.idle = 0
+                return self._step_result(res, n_done0)
+            st.idle = 0
 
             if self.mixed and any(pending[s] is not None
                                   for s in active_ix):
@@ -733,8 +895,8 @@ class Engine:
                         continue
                     ok, rec, esc = self._grow_span(
                         int(s), int(sl.lengths[s]) + int(n_new[s]), done)
-                    preemptions += rec + esc
-                    preempt_recovered += rec
+                    st.preemptions += rec + esc
+                    st.preempt_recovered += rec
                     if not ok:
                         # deferred (pool dry, this slot youngest): ride
                         # this step as an inert row, chunk intact.
@@ -746,7 +908,7 @@ class Engine:
                 n_new = np.where(sl.active, n_new, 0).astype(np.int32)
                 active_ix = np.flatnonzero(sl.active)
                 if active_ix.size == 0:
-                    continue
+                    return self._step_result(res, n_done0)
                 toks = np.zeros((self.num_slots, S), np.int32)
                 for s in active_ix:
                     if pending[s] is not None:
@@ -759,29 +921,31 @@ class Engine:
                         np.where(sl.active,
                                  np.minimum(sl.lengths + n_new, ring), 0),
                         ring, min(self._block_k, ring))
-                    blocks_visited += bs["visited"]
-                    blocks_dense += bs["dense"]
-                    kv_bytes += (bs["visited"] * min(self._block_k, ring)
-                                 * self._ring_layers[ring]
-                                 * self._kv_token_bytes)
+                    st.blocks_visited += bs["visited"]
+                    st.blocks_dense += bs["dense"]
+                    st.kv_bytes += (bs["visited"] * min(self._block_k, ring)
+                                    * self._ring_layers[ring]
+                                    * self._kv_token_bytes)
                 nan_mask = self._no_nan
                 if inj is not None:
                     m = inj.nan_mask()
                     if m is not None:
                         nan_mask = jnp.asarray(m)
                 tables = sl.pool.device_tables()
+                sampled = bool(np.any(self._temps[sl.active] > 0))
                 nxt, sl.caches = self._mixed(
                     self.params, jnp.asarray(toks), sl.caches,
                     jnp.asarray(sl.lengths), jnp.asarray(n_new),
                     jnp.asarray(sl.active), jnp.asarray(self._seeds),
-                    tables, nan_mask)
+                    jnp.asarray(self._temps), jnp.asarray(self._topks),
+                    tables, nan_mask, sampled)
                 nxt = np.asarray(nxt)  # the step's single host sync
                 self._device_time += self._chunk_width
-                steps += 1
-                mixed_steps += 1
-                active_slot_steps += active_ix.size
+                st.steps += 1
+                st.mixed_steps += 1
+                st.active_slot_steps += active_ix.size
                 if self.paged:
-                    pages_used_steps += sl.pool.pages_in_use()
+                    st.pages_used_steps += sl.pool.pages_in_use()
                 for s in active_ix:
                     tok = int(nxt[s])
                     req = sl.request[s]
@@ -798,7 +962,7 @@ class Engine:
                         if c <= 0:
                             continue  # budget-starved: nothing this step
                         sl.advance_n(int(s), c)
-                        chunk_tokens += c
+                        st.chunk_tokens += c
                         rest = pending[s][c:]
                         if len(rest):
                             # still mid-prefill: the sampled column is a
@@ -811,10 +975,10 @@ class Engine:
                         # prefill's first token. Publish the prompt's full
                         # pages now that they hold their final bytes.
                         if self.prefix_share:
-                            sl.pool.publish_prefix(int(s), pending_full[s])
+                            self._publish_prefix(int(s), pending_full[s])
                         pending[s] = None
                         pending_full[s] = None
-                        req.output.append(tok)
+                        self._emit(req, tok)
                         self._note_ttft(req)
                         emitted[s] = len(req.output)
                         cur[s] = tok
@@ -823,14 +987,14 @@ class Engine:
                             sl.release(int(s))
                         continue
                     sl.advance(s)
-                    req.output.append(tok)
+                    self._emit(req, tok)
                     emitted[s] += 1
                     cur[s] = tok
-                    decoded_tokens += 1
+                    st.decoded_tokens += 1
                     if emitted[s] >= budget[s] or tok == self.eos_id:
                         self._finish(req, "ok", None, done)
                         sl.release(s)
-                continue
+                return self._step_result(res, n_done0)
 
             # Predicated-kernel work accounting: the TDA grid visits only
             # the kv blocks covering each active lane's occupancy (+1 for
@@ -841,13 +1005,13 @@ class Engine:
                 bs = block_stats(
                     np.where(sl.active, np.minimum(sl.lengths + 1, ring), 0),
                     ring, min(self._block_k, ring))
-                blocks_visited += bs["visited"]
-                blocks_dense += bs["dense"]
+                st.blocks_visited += bs["visited"]
+                st.blocks_dense += bs["dense"]
                 # KV bytes this step: visited blocks x tokens/block, once
                 # per attention layer sharing this ring shape.
-                kv_bytes += (bs["visited"] * min(self._block_k, ring)
-                             * self._ring_layers[ring]
-                             * self._kv_token_bytes)
+                st.kv_bytes += (bs["visited"] * min(self._block_k, ring)
+                                * self._ring_layers[ring]
+                                * self._kv_token_bytes)
 
             nan_mask = self._no_nan
             if inj is not None:
@@ -855,16 +1019,18 @@ class Engine:
                 if m is not None:
                     nan_mask = jnp.asarray(m)
             tables = sl.pool.device_tables() if self.paged else {}
+            sampled = bool(np.any(self._temps[sl.active] > 0))
             nxt, sl.caches = self._decode(
                 self.params, jnp.asarray(cur[:, None]), sl.caches,
                 jnp.asarray(sl.lengths), jnp.asarray(sl.active),
-                jnp.asarray(self._seeds), tables, nan_mask)
+                jnp.asarray(self._seeds), jnp.asarray(self._temps),
+                jnp.asarray(self._topks), tables, nan_mask, sampled)
             nxt = np.asarray(nxt)  # the step's single host sync
             self._device_time += 1
-            steps += 1
-            active_slot_steps += active_ix.size
+            st.steps += 1
+            st.active_slot_steps += active_ix.size
             if self.paged:
-                pages_used_steps += sl.pool.pages_in_use()
+                st.pages_used_steps += sl.pool.pages_in_use()
             for s in active_ix:
                 sl.advance(s)
                 tok = int(nxt[s])
@@ -880,30 +1046,50 @@ class Engine:
                                  "non-finite logits (NaN/Inf) in the "
                                  "decode step", done)
                     continue
-                req.output.append(tok)
+                self._emit(req, tok)
                 emitted[s] += 1
                 cur[s] = tok
-                decoded_tokens += 1
+                st.decoded_tokens += 1
                 if emitted[s] >= budget[s] or tok == self.eos_id:
                     self._finish(req, "ok", None, done)
                     sl.release(s)
+            return self._step_result(res, n_done0)
+        finally:
+            self._events = None
 
+    def finish_run(self) -> List[Request]:
+        """Close the stepping session: build ``decode_stats`` from the
+        session's counters, reset the per-session state, and return every
+        request that reached a terminal status (completion order) — what
+        the old monolithic ``run`` returned."""
+        st = self._session()  # an idle session still reports + drains
+        sl = self.slots
+        inj = self._inj
+        done = st.done
+        # Inter-token latency in modeled device tokens: gaps between each
+        # request's consecutive emission stamps (see _emit). Deterministic
+        # like the TTFT device_tokens metric — the trace benchmark's gated
+        # itl_p50/itl_p99 source.
+        itl = [b - a
+               for r in done
+               for a, b in zip(getattr(r, "_token_dev", []),
+                               getattr(r, "_token_dev", [])[1:])]
         self.decode_stats = {
-            "steps": steps,
-            "decoded_tokens": decoded_tokens,
-            "slot_utilization": (active_slot_steps
-                                 / max(steps * self.num_slots, 1)),
-            "kv_blocks_visited": blocks_visited,
-            "kv_blocks_dense": blocks_dense,
-            "kv_block_ratio": blocks_visited / max(blocks_dense, 1),
+            "steps": st.steps,
+            "decoded_tokens": st.decoded_tokens,
+            "slot_utilization": (st.active_slot_steps
+                                 / max(st.steps * self.num_slots, 1)),
+            "kv_blocks_visited": st.blocks_visited,
+            "kv_blocks_dense": st.blocks_dense,
+            "kv_block_ratio": st.blocks_visited / max(st.blocks_dense, 1),
             "paged": self.paged,
-            "preemptions": preemptions,
+            "preemptions": st.preemptions,
             # Footprint analogue of kv_block_ratio: mean fraction of the
             # page pool actually holding tokens (contiguous lanes allocate
             # everything up front — ratio 1.0 by definition).
             "kv_pages_total": sl.pool.total_pages if self.paged else 0,
             "kv_memory_ratio": (
-                pages_used_steps / max(steps * sl.pool.total_pages, 1)
+                st.pages_used_steps / max(st.steps * sl.pool.total_pages, 1)
                 if self.paged else 1.0),
             # Prefix sharing: fraction of admitted prompt tokens whose KV
             # came from shared pages (no recompute, no rewrite), and the
@@ -918,18 +1104,20 @@ class Engine:
             # fewer bytes than dense at equal tokens.
             "weight_format": self.model.cfg.weight_format,
             "weight_bytes_per_step": self._weight_stream_bits / 8.0,
-            "weight_bytes_per_token": (steps * self._weight_stream_bits / 8.0
-                                       / max(decoded_tokens, 1)),
-            "kv_bytes_per_token": kv_bytes / max(decoded_tokens, 1),
+            "weight_bytes_per_token": (st.steps
+                                       * self._weight_stream_bits / 8.0
+                                       / max(st.decoded_tokens, 1)),
+            "kv_bytes_per_token": st.kv_bytes / max(st.decoded_tokens, 1),
             # Tensor-parallel decode: each rank streams only its
             # kv_heads / tp_ranks head-slice of every visited page, so
             # per-rank KV traffic scales ~1/N with the mesh (gated by
             # tools/check_bench.py via the decode/sharded row).
             "tp_ranks": self._tp,
             "kv_bytes_per_token_per_rank": (
-                kv_bytes / max(decoded_tokens, 1) / self._tp),
-            "bytes_per_token": ((steps * self._weight_stream_bits / 8.0
-                                 + kv_bytes) / max(decoded_tokens, 1)),
+                st.kv_bytes / max(st.decoded_tokens, 1) / self._tp),
+            "bytes_per_token": ((st.steps * self._weight_stream_bits / 8.0
+                                 + st.kv_bytes)
+                                / max(st.decoded_tokens, 1)),
             # Failure-model counters (docs/serving.md): terminal statuses
             # since the last run (submit-time sheds/rejects included),
             # preemption recovery split, audit trips (0 on any run that
@@ -941,11 +1129,17 @@ class Engine:
             "rejected": self._counts["rejected"],
             "timed_out": self._counts["timed_out"],
             "failed": self._counts["failed"],
-            "preemptions_recovered": preempt_recovered,
+            "cancelled": self._counts["cancelled"],
+            "preemptions_recovered": st.preempt_recovered,
             "audit_violations": self._audit_violations,
             "faults_injected": dict(inj.counts) if inj is not None else {},
             "clock_ticks": self._clock,
             "device_time": self._device_time,
+            # Cross-replica prefix sharing: pages restored into the local
+            # pool from the fleet index's host tier this session.
+            "fleet_restored_pages": self._fleet_restored_pages,
+            "itl_p50": float(np.percentile(itl, 50)) if itl else 0.0,
+            "itl_p99": float(np.percentile(itl, 99)) if itl else 0.0,
             # Mixed-step accounting + per-request time-to-first-token:
             # wall seconds since submit, deterministic clock ticks, and
             # ``device_tokens`` — modeled device time (each jitted dispatch
@@ -956,8 +1150,8 @@ class Engine:
             # FLOPs and clock ticks hide whole-prompt admission sweeps.
             "mixed": self.mixed,
             "prefill_budget": self.prefill_budget,
-            "mixed_steps": mixed_steps,
-            "prefill_chunk_tokens": chunk_tokens,
+            "mixed_steps": st.mixed_steps,
+            "prefill_chunk_tokens": st.chunk_tokens,
             "ttft": {
                 r.rid: {"wall_s": float(r._ttft_wall),
                         "clock": int(r._ttft_clock),
@@ -967,6 +1161,7 @@ class Engine:
         }
         self._counts = {s: 0 for s in TERMINAL_STATUSES}
         self._inj = None
+        self._st = None
         return done
 
     # ------------------------------------------------------------------
@@ -1170,13 +1365,13 @@ class Engine:
                 self.slots.copy_pages(copies)
             pending[slot] = prompt[off:]
             pending_full[slot] = prompt
-            seed = np.uint32(
-                (target.seed if target.seed is not None
-                 else self._base_seed + target.rid) & 0xFFFFFFFF)
+            temp, topk, seed = self._resolve_sampling(target)
             cur[slot] = 0  # unused until the first token lands
             emitted[slot] = len(target.output)
             budget[slot] = total_budget
             self._seeds[slot] = seed
+            self._temps[slot] = temp
+            self._topks[slot] = topk
             self._admit_seq[slot] = self._seq
             self._seq += 1
         if n_processed:
@@ -1307,15 +1502,123 @@ class Engine:
             self._audit_violations += 1
             raise
 
+    def _resolve_sampling(self, target: Request
+                          ) -> Tuple[float, int, np.uint32]:
+        """Resolve a request's effective (temperature, top_k, seed) at
+        admission: its optional :class:`SamplingParams` override the
+        engine-wide defaults field by field (``top_k=0`` explicitly
+        disables truncation); the seed precedence is
+        ``SamplingParams.seed`` > ``Request.seed`` > base_seed + rid —
+        the same derivation the engine always used, so legacy runs are
+        bit-identical."""
+        sp = target.sampling
+        temp = self.temperature if sp is None or sp.temperature is None \
+            else float(sp.temperature)
+        topk = self.top_k if sp is None or sp.top_k is None \
+            else int(sp.top_k)
+        if sp is not None and sp.seed is not None:
+            seed_src = sp.seed
+        elif target.seed is not None:
+            seed_src = target.seed
+        else:
+            seed_src = self._base_seed + target.rid
+        return (float(temp), int(topk or 0),
+                np.uint32(int(seed_src) & 0xFFFFFFFF))
+
     # ------------------------------------------------------------------
-    # prefix sharing: probe + hit-aware page reservation
+    # prefix sharing: probe + hit-aware page reservation + fleet tier
     # ------------------------------------------------------------------
+
+    def attach_fleet(self, fleet) -> None:
+        """Join a cross-replica :class:`~repro.serve.pages.FleetPrefixIndex`
+        (``serve/dispatch.py`` wires one across its replicas): local prefix
+        publishes mirror page bytes into the fleet's host tier, and probes
+        first restore any fleet-only pages into the local pool — so a hot
+        prompt prefills once per fleet, and locally evicted pages remain
+        restorable from host memory."""
+        if not self.prefix_share:
+            raise UnsupportedConfigError(
+                "a fleet prefix index needs local prefix sharing: this "
+                "engine has prefix_share disabled (or a non-paged / "
+                "recurrent stack that cannot share)")
+        if self._tp > 1:
+            raise UnsupportedConfigError(
+                "fleet prefix sharing reads/writes whole pages on the "
+                "host and is single-rank: a KV-head-sharded cache would "
+                "need per-rank page slices. Serve fleet replicas "
+                "unsharded, or drop the fleet index.")
+        self._fleet = fleet
+
+    def _publish_prefix(self, slot: int, tokens) -> None:
+        """Publish a freshly prefilled lane's full pages locally, then
+        mirror each indexed page's bytes into the fleet tier (consecutive
+        from logical page 0 — a fleet entry is only useful as part of an
+        unbroken chain, exactly like the local probe's hit run)."""
+        pool = self.slots.pool
+        pool.publish_prefix(slot, np.asarray(tokens, np.int32))
+        fleet = self._fleet
+        if fleet is None:
+            return
+        toks = np.asarray(tokens, np.int32)
+        ps = pool.page_size
+        m = len(toks) // ps
+        if m == 0:
+            return
+        digests = prefix_digests(toks, ps, m)
+        for w, c in pool.classes.items():
+            if len(toks) > c.width:
+                continue  # wrapped ring: content not prefix-determined
+            for lp in range(m):
+                pg = c.index.get((lp, digests[lp]))
+                if pg is None:
+                    break
+                if not fleet.has(w, lp, digests[lp]):
+                    fleet.publish(w, lp, digests[lp],
+                                  self.slots.read_page(w, pg))
+
+    def _fleet_restore(self, tokens: np.ndarray) -> None:
+        """Pull fleet-published prefix pages this pool is missing into the
+        local retained tier, so the subsequent local probe hits them. A
+        logical page is restored in EVERY width class or none
+        (``probe_prefix`` takes the min over classes, so a partial
+        restore buys nothing), and the walk stops at the first
+        non-restorable page — hit runs must be consecutive."""
+        fleet = self._fleet
+        pool = self.slots.pool
+        toks = np.asarray(tokens, np.int32)
+        ps = pool.page_size
+        m = len(toks) // ps
+        if m == 0:
+            return
+        if any(len(toks) > c.width for c in pool.classes.values()):
+            return  # a wrapping class can never share this prompt
+        digests = prefix_digests(toks, ps, m)
+        for lp in range(m):
+            plan = []
+            for w, c in pool.classes.items():
+                if (lp, digests[lp]) in c.index:
+                    continue  # already resident locally
+                host = fleet.get(w, lp, digests[lp])
+                if host is None or c.available() == 0:
+                    return
+                plan.append((w, host))
+            for w, host in plan:
+                pg = pool.adopt_published(w, lp, digests[lp])
+                if pg is None:
+                    return
+                self.slots.write_page(w, pg, host)
+                self._fleet_restored_pages += 1
+                fleet.restored_pages += 1
 
     def _probe(self, prompt) -> Optional[PrefixHit]:
         """Prefix-cache lookup for a prompt (None when sharing is off or
-        nothing matches)."""
+        nothing matches). With a fleet attached, fleet-only pages are
+        restored into the local pool first, so the local probe is the
+        single source of truth for what a hit maps."""
         if not self.prefix_share:
             return None
+        if self._fleet is not None:
+            self._fleet_restore(np.asarray(prompt, np.int32))
         return self.slots.pool.probe_prefix(np.asarray(prompt, np.int32))
 
     def _probe_req(self, req: Request) -> Optional[PrefixHit]:
@@ -1328,7 +1631,10 @@ class Engine:
         engines must never replay a hit holding another pool's physical
         page ids."""
         pool = self.slots.pool
-        ver = pool.prefix_version
+        # The fleet version rides in the memo key: a publish on another
+        # replica must invalidate this replica's cached miss.
+        ver = (pool.prefix_version,
+               self._fleet.version if self._fleet is not None else -1)
         memo = getattr(req, "_probe_memo", None)
         if memo is not None and memo[0] is pool and memo[1] == ver:
             return memo[2]
@@ -1397,7 +1703,8 @@ class Engine:
             rid=req.rid,
             prompt=np.concatenate([np.asarray(req.prompt, np.int32),
                                    np.asarray(req.output, np.int32)]),
-            max_new_tokens=req.max_new_tokens, seed=req.seed)
+            max_new_tokens=req.max_new_tokens, seed=req.seed,
+            sampling=req.sampling)
         cont._origin = req  # type: ignore[attr-defined]
         self.scheduler.requeue(cont)
         self.slots.release(slot)  # returns the lane's pages to the pool
@@ -1449,16 +1756,15 @@ class Engine:
                 # require a slot).
                 self._prompt_tokens += total
                 self._shared_tokens += off
-                seed = np.uint32(
-                    (target.seed if target.seed is not None
-                     else self._base_seed + target.rid) & 0xFFFFFFFF)
-                if self.temperature > 0:
+                temp, topk, seed = self._resolve_sampling(target)
+                if temp > 0:
                     first = int(self._sample1(
                         jnp.asarray(logits[row, start + length - 1]),
-                        jnp.asarray(seed), jnp.int32(total)))
+                        jnp.asarray(seed), jnp.int32(total),
+                        jnp.float32(temp), jnp.int32(topk)))
                 else:
                     first = int(np.argmax(logits[row, start + length - 1]))
-                target.output.append(first)
+                self._emit(target, first)
                 self._note_ttft(target)
                 if len(target.output) >= total_budget or first == self.eos_id:
                     # finished at prefill; slot stays free
@@ -1479,13 +1785,15 @@ class Engine:
                 emitted[slot] = len(target.output)
                 budget[slot] = total_budget
                 self._seeds[slot] = seed
+                self._temps[slot] = temp
+                self._topks[slot] = topk
                 self._admit_seq[slot] = self._seq
                 self._seq += 1
             self.slots.assign_many(assigns, caches)
             # Publish after the fused copy: only then do the lane's full
             # pages hold their final, content-addressable bytes.
             for slot, toks in pubs:
-                pool.publish_prefix(slot, np.asarray(toks, np.int32))
+                self._publish_prefix(slot, np.asarray(toks, np.int32))
         return n_processed
 
     def _prefill_admission(self, adm: Admission):

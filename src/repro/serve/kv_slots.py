@@ -494,6 +494,45 @@ class SlotKVCache:
             out_k[name], out_v[name] = block(d, self.widths[name])
         return out_k, out_v
 
+    def read_page(self, width: int, page: int) -> List[np.ndarray]:
+        """Host copy of one physical page's bytes across every kv leaf of
+        the width class (k/v and any scales), in ``jax.tree`` traversal
+        order — the byte payload a
+        :class:`~repro.serve.pages.FleetPrefixIndex` publish mirrors.
+        Quantized leaves copy their codes/scales verbatim, so a restore
+        is bit-identical by construction."""
+        ba = 1 if self._stacked else 0
+        out: List[np.ndarray] = []
+
+        def per_leaf(leaf, spec, w):
+            if spec == "kv" and w == width:
+                sl = leaf[page] if ba == 0 else leaf[:, page]
+                out.append(np.asarray(sl))
+            return leaf
+
+        jax.tree.map(per_leaf, self.caches, self.specs, self.widths)
+        return out
+
+    def write_page(self, width: int, page: int,
+                   host: Sequence[np.ndarray]) -> None:
+        """Inverse of :meth:`read_page`: write host page bytes into one
+        physical page of every kv leaf of the width class (same traversal
+        order). Used by the fleet-restore path after
+        ``PagePool.adopt_published`` hands the bytes a local page."""
+        ba = 1 if self._stacked else 0
+        it = iter(host)
+
+        def per_leaf(leaf, spec, w):
+            if spec != "kv" or w != width:
+                return leaf
+            val = jnp.asarray(next(it), leaf.dtype)
+            if ba == 0:
+                return leaf.at[page].set(val)
+            return leaf.at[:, page].set(val)
+
+        self.caches = jax.tree.map(per_leaf, self.caches, self.specs,
+                                   self.widths)
+
     def claim(self, slot: int, request, length: int = 0) -> None:
         """Claim ``slot`` for ``request`` without copying any lane state
         (mixed-step chunked prefill: the model writes the chunk K/V

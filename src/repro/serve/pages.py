@@ -86,7 +86,8 @@ import numpy as np
 
 from repro.core.errors import AuditError
 
-__all__ = ["PagePool", "PageClass", "PrefixHit", "prefix_digests"]
+__all__ = ["FleetPrefixIndex", "PagePool", "PageClass", "PrefixHit",
+           "prefix_digests"]
 
 # (width, src_page, dst_page): a device-side page copy the caller owes the
 # pool after a copy-on-write remap (SlotKVCache.copy_pages executes them).
@@ -116,6 +117,75 @@ class PrefixHit:
 
     n_shared: int
     pages: Dict[int, List[int]]
+
+
+class FleetPrefixIndex:
+    """Cross-replica prefix index with a host-memory page tier.
+
+    One instance is shared by N engine replicas (``serve/dispatch.py``
+    wires it): when a replica publishes a prompt's full prefix pages
+    locally, it also mirrors each page's **bytes** here (host numpy
+    copies, keyed by the same ``(width, logical_page, chained_digest)``
+    content address the local index uses). A replica probing a prompt
+    that was only ever prefilled on a *different* replica pulls the
+    missing pages out of this tier into its own pool
+    (``PagePool.adopt_published`` + ``SlotKVCache.write_page``) and then
+    hits locally — so a hot system prompt is prefilled once per fleet,
+    not once per replica. Evicted local pages stay restorable for as
+    long as this index retains them (LRU, bounded by ``capacity``).
+
+    Keys are content-chained exactly like the local index, so a byte
+    payload is valid for any replica of the same model/config — the tier
+    never stores replica-relative state. Single-process by design (the
+    replicas here are in-process engine instances); it is the natural
+    seam for a real shared-memory/RDMA tier later."""
+
+    def __init__(self, capacity: Optional[int] = None):
+        if capacity is not None and capacity <= 0:
+            raise ValueError("capacity must be positive when set")
+        self.capacity = capacity
+        # (width, logical_page, digest) -> host page bytes (one np array
+        # per kv leaf of the width class, in SlotKVCache.read_page order).
+        self._store: "OrderedDict[Tuple[int, int, str], List[np.ndarray]]" \
+            = OrderedDict()
+        # Bumped on every store mutation: engines fold this into their
+        # probe memo key so a fleet publish invalidates cached misses.
+        self.version = 0
+        self.published = 0
+        self.hits = 0
+        self.misses = 0
+        self.restored_pages = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def has(self, width: int, lp: int, digest: str) -> bool:
+        return (width, lp, digest) in self._store
+
+    def publish(self, width: int, lp: int, digest: str,
+                host_page: List[np.ndarray]) -> None:
+        """Mirror one page's bytes (first publisher wins — identical
+        content by construction). LRU-evicts past ``capacity``."""
+        key = (width, lp, digest)
+        if key in self._store:
+            return
+        self._store[key] = host_page
+        self.published += 1
+        self.version += 1
+        if self.capacity is not None:
+            while len(self._store) > self.capacity:
+                self._store.popitem(last=False)
+
+    def get(self, width: int, lp: int,
+            digest: str) -> Optional[List[np.ndarray]]:
+        key = (width, lp, digest)
+        page = self._store.get(key)
+        if page is None:
+            self.misses += 1
+            return None
+        self._store.move_to_end(key)
+        self.hits += 1
+        return page
 
 
 class PageClass:
@@ -323,6 +393,30 @@ class PagePool:
                 c.index[key] = pg
                 c.published[pg] = key
                 self.prefix_version += 1
+
+    def adopt_published(self, width: int, lp: int,
+                        digest: str) -> Optional[int]:
+        """Bring a fleet-published page into this pool as a local prefix
+        hit: take a free (or LRU-evicted retained) page, register it in
+        the prefix index, and park it **retained** (refcount 0, evictable
+        like any published page whose holders released). The caller owes
+        the page its bytes (``SlotKVCache.write_page``) before the next
+        probe can map it. Returns the physical page id, the already
+        resident page when the key is already indexed, or None when the
+        class has no obtainable page (restore skipped, not fatal)."""
+        c = self.classes[width]
+        key = (lp, digest)
+        if key in c.index:
+            return c.index[key]
+        pg = self._take_page(c)
+        if pg is None:
+            return None
+        c.index[key] = pg
+        c.published[pg] = key
+        c.retained[pg] = None
+        c.retained.move_to_end(pg)
+        self.prefix_version += 1
+        return pg
 
     # -- allocation ----------------------------------------------------
 

@@ -19,17 +19,51 @@ The same functions run in two places: vmapped over all slots inside the
 jitted decode step, and on a single row host-side when the engine samples
 a request's *first* token from its prefill logits — identical math, so the
 first token is as reproducible as the rest.
+
+**Per-request sampling** (:class:`SamplingParams`): the engine-wide
+``temperature``/``top_k``/``seed`` are only *defaults* — a
+:class:`~repro.serve.scheduler.Request` may carry its own
+``SamplingParams``, and :func:`sample_tokens_batch` threads per-row
+temperatures and top-k cutoffs through one fixed-shape graph so a single
+jitted step serves mixed greedy + sampled batches. Greedy rows
+(``temperature == 0``) select a plain-argmax lane computed on the raw
+float32-cast logits — bit-identical to the dedicated greedy path — and a
+sampled row with uniform parameters draws exactly the token
+:func:`sample_tokens` draws (same scaled logits, same kth-value cutoff,
+same fold_in key), so per-request parameters are equivalence-tested
+against single-parameter engine runs (``tests/test_frontend.py``).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["sample_tokens"]
+__all__ = ["SamplingParams", "sample_tokens", "sample_tokens_batch"]
 
 NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling overrides. ``None`` fields inherit the
+    engine-wide default; explicit values win.
+
+    * ``temperature`` — 0.0 forces greedy argmax for this request even on
+      a sampling engine; > 0 samples.
+    * ``top_k`` — truncate to the k highest logits before drawing. ``0``
+      explicitly disables truncation (full vocabulary) even when the
+      engine default truncates; ``None`` inherits.
+    * ``seed`` — per-request PRNG stream. Wins over ``Request.seed``;
+      ``None`` falls back to it (then to the engine's base-seed + rid
+      derivation).
+    """
+
+    temperature: Optional[float] = None
+    top_k: Optional[int] = None
+    seed: Optional[int] = None
 
 
 def sample_tokens(logits: jnp.ndarray,  # (B, V) float
@@ -56,3 +90,42 @@ def sample_tokens(logits: jnp.ndarray,  # (B, V) float
     return jax.vmap(draw)(seeds.astype(jnp.uint32),
                           positions.astype(jnp.int32),
                           x).astype(jnp.int32)
+
+
+def sample_tokens_batch(logits: jnp.ndarray,  # (B, V) float
+                        seeds: jnp.ndarray,  # (B,) uint32
+                        positions: jnp.ndarray,  # (B,) int32
+                        temperatures: jnp.ndarray,  # (B,) float32
+                        top_ks: jnp.ndarray) -> jnp.ndarray:  # (B,) int32
+    """Per-row temperature/top-k sampling in ONE fixed-shape graph, for
+    mixed greedy + sampled batches (per-request :class:`SamplingParams`).
+
+    Rows with ``temperatures[b] == 0`` take the greedy lane: plain argmax
+    over the float32-cast logits, bit-identical to the engine's dedicated
+    greedy path. Sampling rows divide by their own temperature and
+    truncate to their own ``top_ks[b]`` highest logits (``top_ks[b] <= 0``
+    = no truncation). The per-row kth-value cutoff comes from a full
+    descending sort — ``sort(x)[k-1]`` is exactly ``lax.top_k(x, k)[0][-1]``
+    — so a uniform-parameter batch draws the very tokens
+    :func:`sample_tokens` draws. Returns (B,) int32."""
+    x = logits.astype(jnp.float32)
+    greedy = jnp.argmax(x, axis=-1).astype(jnp.int32)
+    t = temperatures.astype(jnp.float32)
+    # Guarded divisor: greedy rows' sampled lane is discarded by the final
+    # select, but dividing by zero would poison it with NaN -> categorical
+    # garbage is fine, Inf propagation through sort is not worth auditing.
+    xs = x / jnp.where(t > 0, t, 1.0)[:, None]
+    V = x.shape[-1]
+    k = jnp.where(top_ks > 0, jnp.clip(top_ks, 1, V), V).astype(jnp.int32)
+    srt = jnp.sort(xs, axis=-1)[:, ::-1]  # descending
+    kth = jnp.take_along_axis(srt, (k - 1)[:, None], axis=-1)
+    xs = jnp.where(xs < kth, NEG_INF, xs)
+
+    def draw(seed, pos, row):
+        key = jax.random.fold_in(jax.random.key(seed), pos)
+        return jax.random.categorical(key, row)
+
+    sampled = jax.vmap(draw)(seeds.astype(jnp.uint32),
+                             positions.astype(jnp.int32),
+                             xs).astype(jnp.int32)
+    return jnp.where(t > 0, sampled, greedy)

@@ -35,6 +35,7 @@ from repro.core.packing import (
     chunk_prompt,
     pack_requests,
 )
+from repro.serve.sampling import SamplingParams
 
 __all__ = ["Request", "Admission", "Scheduler", "DynamicBatcher",
            "TERMINAL_STATUSES"]
@@ -47,7 +48,11 @@ __all__ = ["Request", "Admission", "Scheduler", "DynamicBatcher",
 #   timed_out — deadline (ttl_steps) expired while queued or in a slot
 #   failed    — quarantined at runtime (non-finite logits, preemption
 #               budget exhausted, watchdog escalation, unrecoverable growth)
-TERMINAL_STATUSES = ("ok", "rejected", "shed", "timed_out", "failed")
+#   cancelled — withdrawn by the caller (Engine.cancel / a front-end
+#               handle's cancel) while queued or mid-decode; its slot and
+#               pages were freed immediately
+TERMINAL_STATUSES = ("ok", "rejected", "shed", "timed_out", "failed",
+                     "cancelled")
 
 
 @dataclasses.dataclass
@@ -68,6 +73,11 @@ class Request:
     # the engine escalates it to status="failed"; None defers to the
     # engine's max_preemptions_per_request (None = unbounded).
     max_preemptions: Optional[int] = None
+    # Per-request sampling overrides (serve/sampling.py): None inherits
+    # the engine-wide temperature/top_k defaults; SamplingParams.seed wins
+    # over Request.seed. Mixed greedy + sampled batches share one jitted
+    # step (sample_tokens_batch threads per-slot parameters in-graph).
+    sampling: Optional[SamplingParams] = None
     # filled by the engine:
     output: Optional[List[int]] = None
     status: Optional[str] = None         # one of TERMINAL_STATUSES when done

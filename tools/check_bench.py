@@ -48,6 +48,14 @@ the offending key named:
     costs its sequence width, batch rows ride idle PE lanes free) below
     the whole-prompt-sweep baseline, whose solo admission sweeps each
     burn a full prompt's width of device time head-of-line.
+  * ``trace.tokens_match`` and ``trace.tokens_match_replicas`` are true
+    — the async front-end and the 2-replica dispatcher fleet replay the
+    Poisson+bursty traffic trace byte-identically to the synchronous
+    engine.
+  * ``trace.ttft_p99`` > 0, ``trace.itl_p99`` > 0 and
+    ``trace.goodput_slo`` > 0 — the trace row's latency percentiles are
+    live (device-token stamps flowing) and some requests finish ok
+    within both SLO budgets.
 * ``BENCH_decode_attn.json``
   * ``kv_block_ratio`` < 0.7 — the TDA kernel's predicated grid visits
     blocks in proportion to occupancy, not capacity.
@@ -136,6 +144,22 @@ GATES = [
     ("BENCH_decode.json", "mixed.mixed_steps",
      lambda v, rec: v > 0, "> 0 (the mixed row actually ran interleaved "
      "steps, not a silent serialized fallback)"),
+    ("BENCH_decode.json", "trace.tokens_match",
+     lambda v, rec: v is True, "True (the async front-end replays the "
+     "traffic trace byte-identically to the synchronous engine, greedy "
+     "and per-request-sampled requests alike)"),
+    ("BENCH_decode.json", "trace.tokens_match_replicas",
+     lambda v, rec: v is True, "True (the 2-replica dispatcher fleet "
+     "emits the single-engine token streams verbatim on the same trace)"),
+    ("BENCH_decode.json", "trace.ttft_p99",
+     lambda v, rec: v > 0, "> 0 (per-request TTFT device-token stamps "
+     "must flow; a zero means the stamp accounting silently broke)"),
+    ("BENCH_decode.json", "trace.itl_p99",
+     lambda v, rec: v > 0, "> 0 (per-token emission stamps must yield "
+     "inter-token gaps; a zero means requests stopped streaming)"),
+    ("BENCH_decode.json", "trace.goodput_slo",
+     lambda v, rec: v > 0, "> 0 (some traced requests must finish ok "
+     "within both the TTFT and ITL device-token budgets)"),
     ("BENCH_decode_attn.json", "kv_block_ratio",
      lambda v, rec: v < 0.7, "< 0.7 (predicated TDA grid vs dense sweep)"),
 ]

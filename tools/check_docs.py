@@ -84,6 +84,19 @@ REQUIRED_ANCHORS = [
     ("serving.md", "decode/mixed"),
     ("README.md", "decode/mixed"),
     ("README.md", "prefill_budget"),
+    # async front-end & replica contract: the section, the new public
+    # API names, the trace sidecar keys, and the README map row
+    ("serving.md", "Async front-end & replicas"),
+    ("serving.md", "EngineConfig"),
+    ("serving.md", "SamplingParams"),
+    ("serving.md", "StreamHandle"),
+    ("serving.md", "FleetPrefixIndex"),
+    ("serving.md", "cancelled"),
+    ("serving.md", "decode/trace"),
+    ("serving.md", "goodput_slo"),
+    ("README.md", "decode/trace"),
+    ("README.md", "goodput_slo"),
+    ("README.md", "SamplingParams"),
 ]
 
 PATH_RE = re.compile(
